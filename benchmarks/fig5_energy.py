@@ -1,0 +1,17 @@
+"""Paper Fig. 5: per-op energy vs matrix dimension M in BA-CAM.
+
+Programming a CAM tile is amortized over M searches; per-op energy decays
+toward the search-only bound."""
+
+from repro.core.energy import energy_vs_m
+
+
+def run(csv_rows):
+    print("\n== Fig 5: BA-CAM per-op energy vs M (pJ) ==")
+    e = energy_vs_m((1, 2, 4, 8, 16, 32, 64, 128, 256))
+    for m, v in e.items():
+        print(f"  M={m:4d}  {v*1e12:7.2f} pJ/op")
+    ratio = e[1] / e[256]
+    print(f"  amortization ratio E(1)/E(256) = {ratio:.2f}x")
+    csv_rows.append(("fig5_amortization_ratio", ratio, "search+prog -> search"))
+    return csv_rows

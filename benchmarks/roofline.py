@@ -1,0 +1,55 @@
+"""Roofline report: assembles the (arch x shape x mesh) table from the
+dry-run artifacts in results/dryrun/ (launch/dryrun.py)."""
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def load_cells(mesh_tag="pod"):
+    rows = []
+    pattern = (f"*_{mesh_tag}.json" if mesh_tag != "hc"
+               else "*_hc_*.json")
+    for f in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def run(csv_rows):
+    for tag, label in (("pod", "single-pod 16x16"),
+                       ("multipod", "multi-pod 2x16x16"),
+                       ("hc", "HILLCLIMBED variants (EXPERIMENTS §Perf: "
+                              "dp profile / distributed CAM search)")):
+        rows = load_cells(tag)
+        if not rows:
+            print(f"\n== roofline table ({label}): no dry-run artifacts — "
+                  f"run `python -m repro.launch.dryrun --all"
+                  f"{' --multi-pod' if tag == 'multipod' else ''}` ==")
+            continue
+        print(f"\n== roofline table ({label}; terms s/step; "
+              f"197TF bf16, 819GB/s HBM, 50GB/s link) ==")
+        print(f"{'arch':24s} {'shape':12s} {'mode':10s} {'comp_s':>9s} "
+              f"{'mem_s':>9s} {'coll_s':>9s} {'dominant':>10s} {'roof%':>6s} "
+              f"{'useful%':>8s} {'GB/dev':>7s}")
+        worst = None
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            roof = r["roofline"]
+            gb = r["memory"]["per_device_total"] / 2**30
+            mode = r["attn_mode"] + ("+" + r["tag"] if r.get("tag") else "")
+            print(f"{r['arch']:24s} {r['shape']:12s} {mode:16s} "
+                  f"{roof['compute_s']:9.2e} {roof['memory_s']:9.2e} "
+                  f"{roof['collective_s']:9.2e} {roof['dominant']:>10s} "
+                  f"{roof['roofline_fraction']*100:6.1f} "
+                  f"{roof['useful_flops_ratio']*100:8.1f} {gb:7.1f}")
+            if r["kind"] == "train":
+                suffix = ("_" + r["tag"]) if r.get("tag") else ""
+                csv_rows.append((f"roofline_{tag}_{r['arch']}_{r['shape']}"
+                                 f"{suffix}",
+                                 roof["roofline_fraction"],
+                                 roof["dominant"] + "-bound"))
+        n_fit = sum(1 for r in rows
+                    if r["memory"]["per_device_total"] < 16 * 2**30)
+        print(f"  cells fitting 16 GB HBM/device: {n_fit}/{len(rows)}")
+    return csv_rows

@@ -1,0 +1,25 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end (scaffold contract);
+human-readable tables above it.
+"""
+
+import sys
+
+
+def main() -> None:
+    csv_rows = []
+    from benchmarks import fig5_energy, roofline, table2_perf, table34_accuracy
+
+    csv_rows = table2_perf.run(csv_rows)
+    csv_rows = fig5_energy.run(csv_rows)
+    csv_rows = table34_accuracy.run(csv_rows)
+    csv_rows = roofline.run(csv_rows)
+
+    print("\nname,us_per_call,derived")
+    for name, val, derived in csv_rows:
+        print(f"{name},{val},{derived}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Serve a small model with batched requests through the continuous-
+batching engine, comparing dense vs CAMformer attention caches.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving.engine import Request, ServeEngine
+
+
+def run(mode: str):
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode=mode)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=4, max_len=96)
+    prompts = [[7, 3, 9, 1], [5, 5, 2], [8, 1, 4, 4, 6], [2, 9],
+               [1, 2, 3, 4, 5], [6, 6, 6]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(prompt=p, max_new_tokens=12, rid=i))
+    t0 = time.perf_counter()
+    done = eng.run()
+    dt = time.perf_counter() - t0
+    toks = sum(len(r.tokens) for r in done)
+    print(f"[{mode:9s}] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s); cache layout: "
+          f"{'packed binary K (6.25% of bf16) + top-32 sparse V' if mode == 'camformer' else 'dense bf16 K/V'}")
+    for r in sorted(done, key=lambda r: r.rid)[:3]:
+        print(f"   req {r.rid}: {r.prompt} -> {r.tokens}")
+
+
+if __name__ == "__main__":
+    run("dense")
+    run("camformer")

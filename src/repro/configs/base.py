@@ -1,0 +1,162 @@
+"""Model configuration system.
+
+One frozen dataclass covers every assigned architecture family (dense /
+GQA / MoE / SSM / hybrid / enc-dec / VLM); per-arch files instantiate it
+with the exact published dimensions and register themselves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+_REGISTRY: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+
+    # --- attention / CAMformer integration (first-class feature) ---
+    attn_mode: str = "dense"  # dense | binary | camformer
+    k_top: int = 32
+    group_size: int = 16
+    stage1_k: int = 2
+    use_kernel: bool = False
+    # Distributed CAM search: shard_map the decode-time association stage
+    # over the seq-sharded cache — local two-stage top-k per shard, then a
+    # tiny candidate all-gather (k values/shard, not N scores) + global
+    # top-k + partial-sum contextualization (EXPERIMENTS §Perf H3).
+    distributed_topk: bool = False
+    # Chunked prefill (serving): process the prompt in chunks of this many
+    # tokens, attending to the cache-so-far — bounds prefill activation
+    # memory by the chunk instead of the full sequence.  0 = whole-sequence.
+    prefill_chunk: int = 0
+    window: Optional[int] = None  # sliding-window layers (hybrid)
+
+    # --- misc transformer knobs ---
+    act: str = "silu"  # silu | gelu | geglu
+    norm: str = "rms"  # rms | layer
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    abs_pos: Optional[str] = None  # sinusoidal (whisper) | None
+    tie_embeddings: bool = False
+
+    # --- MoE ---
+    n_experts: int = 0
+    experts_per_token: int = 0
+    capacity_factor: float = 1.25
+    n_experts_padded: int = 0  # pad expert axis for EP divisibility (router
+    #                            masks pads; e.g. granite 40 -> 48 on a
+    #                            16-way model axis)
+
+    # --- hybrid / ssm ---
+    layer_pattern: Tuple[str, ...] = ()  # e.g. ("rglru", "rglru", "attn")
+    rnn_width: int = 0  # RG-LRU state width
+    conv_width: int = 4
+    rwkv_head_dim: int = 64
+
+    # --- encoder-decoder / multimodal frontends (stubs per assignment) ---
+    enc_layers: int = 0
+    enc_len: int = 0  # fixed encoder length (whisper: 1500 frames)
+    frontend: Optional[str] = None  # audio | vision
+    n_patches: int = 0  # vision patch embeddings prepended to the sequence
+
+    # --- numerics / compilation ---
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    scan_layers: bool = True
+    remat: str = "full"  # full | none
+
+    @property
+    def padded_experts(self) -> int:
+        return self.n_experts_padded or self.n_experts
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded to 128 (TPU lanes + mesh divisibility); embedding /
+        head params use this width, logits mask the pad columns."""
+        return -(-self.vocab // 128) * 128
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]
+    return cfg.replace(**overrides) if overrides else cfg
+
+
+def list_archs() -> list:
+    import repro.configs  # noqa: F401
+
+    return sorted(_REGISTRY)
+
+
+def smoke_config(name: str, **overrides) -> ModelConfig:
+    """Reduced same-family config for CPU smoke tests (shape-preserving
+    ratios: GQA grouping, MoE top-k, layer pattern are kept)."""
+    cfg = get_config(name)
+    kv_ratio = max(1, cfg.n_heads // max(cfg.n_kv_heads, 1))
+    n_heads = 4
+    n_kv = max(1, n_heads // kv_ratio)
+    small = dict(
+        n_layers=min(cfg.n_layers, 2 * max(1, len(cfg.layer_pattern) or 1)),
+        d_model=64,
+        n_heads=n_heads,
+        n_kv_heads=n_kv,
+        head_dim=32,
+        d_ff=96 if cfg.n_experts == 0 else 32,
+        vocab=256,
+        rnn_width=64 if cfg.rnn_width else 0,
+        n_experts=min(cfg.n_experts, 8),
+        experts_per_token=min(cfg.experts_per_token, 2),
+        enc_layers=min(cfg.enc_layers, 2),
+        enc_len=min(cfg.enc_len, 16) if cfg.enc_len else 0,
+        n_patches=min(cfg.n_patches, 8) if cfg.n_patches else 0,
+        k_top=8,
+        group_size=4,
+        dtype="float32",
+        param_dtype="float32",
+    )
+    small.update(overrides)
+    return cfg.replace(**small)
+
+
+# Assigned input shapes (seq_len, global_batch) per shape id.
+SHAPES = {
+    "train_4k": dict(seq_len=4096, global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32768, global_batch=32, kind="prefill"),
+    "decode_32k": dict(seq_len=32768, global_batch=128, kind="decode"),
+    "long_500k": dict(seq_len=524288, global_batch=1, kind="decode"),
+}

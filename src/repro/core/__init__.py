@@ -1,0 +1,29 @@
+"""CAMformer core: the paper's contribution as composable JAX modules."""
+
+from repro.core.attention import AttentionSpec, attention, dense_reference, make_mask
+from repro.core.bacam import (
+    CAM_H,
+    CAM_W,
+    bacam_scores,
+    binary_scores_exact,
+    hamming_scores_packed,
+    pack_bits,
+    unpack_bits,
+)
+from repro.core.binarize import binarize_qk, had_scales, sign_pm1, sign_ste
+from repro.core.topk import (
+    NEG_INF,
+    hoeffding_drop_bound,
+    single_stage_topk,
+    topk_recall,
+    two_stage_topk,
+)
+
+__all__ = [
+    "AttentionSpec", "attention", "dense_reference", "make_mask",
+    "CAM_H", "CAM_W", "bacam_scores", "binary_scores_exact",
+    "hamming_scores_packed", "pack_bits", "unpack_bits",
+    "binarize_qk", "had_scales", "sign_pm1", "sign_ste",
+    "NEG_INF", "hoeffding_drop_bound", "single_stage_topk",
+    "topk_recall", "two_stage_topk",
+]

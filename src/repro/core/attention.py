@@ -1,0 +1,218 @@
+"""CAMformer attention: Eq. 1 of the paper as a composable JAX module.
+
+    CAMformer-Attn(Q, K, V) = SoftMax(Top-32(QK^T)) . V
+
+with QK^T computed on binarized operands by the BA-CAM device model (or its
+Pallas kernel) and Top-32 realized as the two-stage hierarchical top-k.
+
+Three modes, forming the ablation ladder of Tables III/IV:
+
+  * ``dense``     — standard softmax attention (the oracle / teacher).
+  * ``binary``    — HAD-binarized Q/K, *full* softmax over all N binary
+                    scores (single-stage upper bound, no sparsity).
+  * ``camformer`` — binary scores -> two-stage top-k -> softmax over the k
+                    survivors -> sparse V contextualization (the paper).
+
+GQA is supported natively: q may have H = G * H_kv heads against H_kv
+key/value heads; K/V are never materialized repeated.
+
+Ordering note (faithfulness): the CAM selects on the *raw* binary score
+(matchline voltage).  HAD's per-tensor scales therefore only enter as a
+softmax temperature, never in the selection — we reduce the key scale per
+head (not per row) so selection ordering matches the hardware exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bacam
+from repro.core.binarize import binarize_qk
+from repro.core.topk import NEG_INF, two_stage_topk, single_stage_topk
+
+__all__ = ["AttentionSpec", "attention", "dense_reference", "make_mask"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AttentionSpec:
+    """Configuration of the attention operator (first-class feature)."""
+
+    mode: str = "dense"  # dense | binary | camformer
+    k_top: int = 32
+    group_size: int = 16  # CAM_H
+    stage1_k: int = 2
+    # Device-fidelity knobs (benchmarks only; None/0.0 == exact integer path)
+    adc_bits: Optional[int] = None
+    noise_sigma: float = 0.0
+    cam_w: int = bacam.CAM_W
+    # Straight-through estimator for training binarized models (HAD)
+    trainable_binarize: bool = False
+    # Route binary scoring through the Pallas BA-CAM kernel
+    use_kernel: bool = False
+
+    def replace(self, **kw) -> "AttentionSpec":
+        return dataclasses.replace(self, **kw)
+
+
+def make_mask(
+    sq: int,
+    skv: int,
+    *,
+    causal: bool = True,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    kv_valid: jax.Array | None = None,
+    window: int | None = None,
+):
+    """Build a boolean validity mask, broadcastable to (B, 1, Sq, Skv).
+
+    Built from iota comparisons (never a materialized (S,S) constant in HBM —
+    XLA fuses these).  ``q_positions``/``kv_positions`` may be traced (decode
+    against a rotating cache); defaults are arange.
+    """
+    if q_positions is None:
+        q_positions = jnp.arange(sq, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_positions = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    qp = q_positions[:, :, None]  # (B?, Sq, 1)
+    kp = kv_positions[:, None, :]  # (B?, 1, Skv)
+    mask = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        mask &= kp <= qp
+    if window is not None:
+        mask &= kp > qp - window
+    if kv_valid is not None:
+        mask &= kv_valid[:, None, :]
+    return mask[:, None]  # (B?, 1, Sq, Skv) — head axis broadcasts
+
+
+def _split_gqa(q: jax.Array, h_kv: int) -> jax.Array:
+    """(B, H, Sq, D) -> (B, H_kv, G, Sq, D) without copying KV."""
+    b, h, sq, d = q.shape
+    if h % h_kv != 0:
+        raise ValueError(f"H={h} not divisible by H_kv={h_kv}")
+    return q.reshape(b, h_kv, h // h_kv, sq, d)
+
+
+def _binary_scores(qg, k, spec: AttentionSpec, rng):
+    """Binary scores (B, Hkv, G, Sq, Skv) + softmax temperature scale."""
+    qb, kb, q_scale, k_scale = binarize_qk(
+        qg, k, trainable=spec.trainable_binarize, with_scales=True
+    )
+    if spec.adc_bits is None and spec.noise_sigma == 0.0:
+        if spec.use_kernel:
+            from repro.kernels import ops as kops  # local import: no cycle
+
+            b, hkv, g, sq, d_ = qb.shape
+            skv = kb.shape[-2]
+            s3 = kops.bacam_scores(
+                qb.reshape(b * hkv, g * sq, d_), kb.reshape(b * hkv, skv, d_)
+            )
+            scores = s3.reshape(b, hkv, g, sq, skv)
+        else:
+            scores = bacam.bacam_scores(qb[...], kb[:, :, None], exact=True)
+    else:
+        kb = kb[:, :, None]  # broadcast against the GQA group axis
+        scores = bacam.bacam_scores(
+            qb,
+            kb,
+            cam_w=spec.cam_w,
+            adc_bits=spec.adc_bits,
+            noise_sigma=spec.noise_sigma,
+            rng=rng,
+            exact=False,
+        )
+    # HAD temperature: per-(query-row) q scale (order-preserving per row) and
+    # per-head k scale (selection on raw scores == hardware).
+    k_scale_head = jnp.mean(k_scale, axis=-2, keepdims=True)  # (B,Hkv,1,1)
+    temp = q_scale * k_scale_head[..., None, :, :]  # (B,Hkv,G,Sq,1)
+    return scores.astype(jnp.float32), temp
+
+
+def attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    spec: AttentionSpec = AttentionSpec(),
+    *,
+    causal: bool = True,
+    q_positions: jax.Array | None = None,
+    kv_positions: jax.Array | None = None,
+    kv_valid: jax.Array | None = None,
+    window: int | None = None,
+    scale: float | None = None,
+    rng: jax.Array | None = None,
+) -> jax.Array:
+    """Multi-head (GQA) attention with selectable CAMformer modes.
+
+    Args:
+      q: (B, H, Sq, D); k: (B, H_kv, Skv, D); v: (B, H_kv, Skv, Dv).
+      causal/window/kv_valid/positions: masking controls (see make_mask).
+      scale: score scale; default 1/sqrt(D).
+
+    Returns: (B, H, Sq, Dv) in q's dtype.
+    """
+    b, h, sq, d = q.shape
+    _, h_kv, skv, dv = v.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qg = _split_gqa(q, h_kv)
+    mask = make_mask(
+        sq,
+        skv,
+        causal=causal,
+        q_positions=q_positions,
+        kv_positions=kv_positions,
+        kv_valid=kv_valid,
+        window=window,
+    )  # (B?,1,Sq,Skv)
+    mask5 = mask[:, :, None]  # (B?,1,1,Sq,Skv) — broadcast over (Hkv, G)
+
+    if spec.mode == "dense":
+        logits = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), k.astype(jnp.float32)
+        ) * scale
+        logits = jnp.where(mask5, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v)
+        return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+    scores, temp = _binary_scores(qg, k, spec, rng)
+    # XNOR-Net/HAD dequant: q.k ~ alpha_q*alpha_k*(qb.kb)  =>  logit = s*temp*scale
+    logits = scores * temp * scale
+
+    if spec.mode == "binary":
+        logits = jnp.where(mask5, logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", w.astype(v.dtype), v)
+        return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+    if spec.mode != "camformer":
+        raise ValueError(f"unknown attention mode {spec.mode!r}")
+
+    # --- CAMformer: select on RAW binary scores (hardware ordering) ---
+    raw = jnp.where(mask5, scores, NEG_INF)
+    top_v, top_i = two_stage_topk(
+        raw, k=spec.k_top, group_size=spec.group_size, stage1_k=spec.stage1_k
+    )  # (B,Hkv,G,Sq,K)
+    valid = top_v > NEG_INF / 2
+    # Temperature applies to the k survivors (softmax LUT stage).
+    sel_logits = jnp.where(valid, top_v * temp * scale, NEG_INF)
+    w = jax.nn.softmax(sel_logits, axis=-1)  # rows with <k valid stay correct
+    # Sparse contextualization: gather only the k selected V rows.
+    v_exp = v[:, :, None, None]  # (B,Hkv,1,1,Skv,Dv)
+    idx = top_i[..., None]  # (B,Hkv,G,Sq,K,1)
+    v_sel = jnp.take_along_axis(v_exp, idx, axis=-2)  # (B,Hkv,G,Sq,K,Dv)
+    out = jnp.einsum("bhgqk,bhgqkd->bhgqd", w.astype(v.dtype), v_sel)
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+def dense_reference(q, k, v, *, causal=True, scale=None, window=None):
+    """Naive full-precision softmax attention oracle (tests/teacher)."""
+    return attention(
+        q, k, v, AttentionSpec(mode="dense"), causal=causal, scale=scale, window=window
+    )

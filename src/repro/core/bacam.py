@@ -1,0 +1,165 @@
+"""BA-CAM device model: binary attention-score computation.
+
+This module is the *functional* model of the paper's Binary Attention CAM
+(Sec. II): a CAM array stores binary keys, a binary query is broadcast, each
+matching bit adds charge to the matchline, and the matchline voltage —
+linearly proportional to Hamming similarity — is digitized by a shared 6-bit
+SAR ADC and mapped to a signed score ``s = 2*ADC(v) - CAM_W`` in [-64, 64]
+(for d_k = 64).
+
+TPU-native adaptation (see DESIGN.md §2): sign bits are packed 32-per-uint32
+word and the matchline accumulate becomes XNOR + ``lax.population_count``.
+For ±1 vectors the *ideal* matchline result equals the integer dot product:
+
+    dot(qb, kb) = matches - mismatches = 2*matches - d = d - 2*popcount(q^k)
+
+so the exact-integer path used in compute is bit-identical to an ideal
+(noise-free, full-precision-ADC) BA-CAM.  The optional device-fidelity knobs
+(``adc_bits``, ``noise_sigma``) model the analog non-idealities the paper
+characterizes (6-bit SAR quantization, sigma = 1.4% matchline deviation,
+Fig. 3b) and are used by the fidelity benchmarks, not the training path.
+
+Vertical tiling (d_k > CAM_W) follows Fig. 4: per-tile analog match counts
+are digitized *per tile* and accumulated digitally in the accumulation
+register — so quantization error enters per CAM_W-wide tile, which the device
+model reproduces exactly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CAM_W",
+    "CAM_H",
+    "pack_bits",
+    "unpack_bits",
+    "hamming_scores_packed",
+    "binary_scores_exact",
+    "adc_readout",
+    "bacam_scores",
+]
+
+# Paper's array geometry (Sec. III-B1): 16 keys x 64 bits per BA-CAM tile.
+CAM_W = 64  # bits per row == matchline width (d_k tile)
+CAM_H = 16  # keys per array (stage-1 top-2 group size)
+
+
+def pack_bits(x: jax.Array) -> jax.Array:
+    """Pack the sign bits of ``x`` (..., d) into uint32 words (..., d//32).
+
+    Bit j of word w is 1 iff x[..., 32*w + j] > 0.  d must be a multiple of
+    32 (all assigned head dims are 64/128/256).
+    """
+    *lead, d = x.shape
+    if d % 32 != 0:
+        raise ValueError(f"packing requires d % 32 == 0, got d={d}")
+    bits = (x > 0).astype(jnp.uint32).reshape(*lead, d // 32, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    # Shifted bits occupy disjoint positions; sum == bitwise OR.
+    return (bits << shifts).sum(axis=-1).astype(jnp.uint32)
+
+
+def unpack_bits(packed: jax.Array, d: int) -> jax.Array:
+    """Inverse of :func:`pack_bits` into {-1,+1} float32 (..., d)."""
+    *lead, w = packed.shape
+    if w * 32 != d:
+        raise ValueError(f"packed width {w} inconsistent with d={d}")
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)
+    return (bits.reshape(*lead, d).astype(jnp.float32) * 2.0 - 1.0)
+
+
+def hamming_scores_packed(q_packed: jax.Array, k_packed: jax.Array, d: int) -> jax.Array:
+    """Signed binary scores from packed operands.
+
+    Args:
+      q_packed: (..., Sq, W) uint32.
+      k_packed: (..., Sk, W) uint32 (same leading dims).
+      d: original bit width (W = d // 32).
+
+    Returns:
+      (..., Sq, Sk) int32 scores in [-d, d]:  s = d - 2*popcount(q ^ k).
+    """
+    x = jnp.bitwise_xor(q_packed[..., :, None, :], k_packed[..., None, :, :])
+    mismatches = jax.lax.population_count(x).astype(jnp.int32).sum(axis=-1)
+    return jnp.int32(d) - 2 * mismatches
+
+
+def binary_scores_exact(qb: jax.Array, kb: jax.Array) -> jax.Array:
+    """Oracle: signed scores as a plain ±1 matmul, s = qb . kb (..., Sq, Sk)."""
+    return jnp.einsum("...qd,...kd->...qk", qb, kb)
+
+
+def adc_readout(match_count: jax.Array, *, cam_w: int = CAM_W, bits: int = 6) -> jax.Array:
+    """Model the 6-bit SAR ADC digitizing one matchline.
+
+    The matchline voltage is v = match_count / cam_w in [0, 1] (linear charge
+    sharing).  The ADC produces code = round(v * (2^bits - 1)); the digital
+    reconstruction is count_hat = code * cam_w / (2^bits - 1).
+
+    For cam_w = 64, bits = 6 the step is 64/63 ~ 1.016 counts: sub-LSB error
+    (the paper's "ADC precision covers the full match range"); bits >= 7 is
+    exact.  Returned as float32 counts.
+    """
+    levels = (1 << bits) - 1
+    v = match_count.astype(jnp.float32) / float(cam_w)
+    code = jnp.clip(jnp.round(v * levels), 0, levels)
+    # The accumulation register reconstructs integer match counts digitally.
+    return jnp.round(code * (float(cam_w) / levels))
+
+
+@partial(jax.jit, static_argnames=("cam_w", "adc_bits", "exact", "noise_sigma"))
+def bacam_scores(
+    qb: jax.Array,
+    kb: jax.Array,
+    *,
+    cam_w: int = CAM_W,
+    adc_bits: int | None = None,
+    noise_sigma: float = 0.0,
+    rng: jax.Array | None = None,
+    exact: bool = True,
+) -> jax.Array:
+    """Full BA-CAM device model for binary QK^T.
+
+    Args:
+      qb, kb: ±1 tensors (..., Sq, d) / (..., Sk, d); d % cam_w == 0
+        (vertical tiling per Fig. 4 when d > cam_w).
+      cam_w: matchline width (bits digitized per ADC conversion).
+      adc_bits: ADC resolution; ``None`` or ``exact=True`` uses the ideal
+        integer path (bit-identical for d_k<=64 @ >=7 bits).
+      noise_sigma: relative matchline-voltage noise (paper: 1.4% => near-
+        lossless, Fig. 3b / Table I footnote).  Requires ``rng``.
+      exact: shortcut to the exact integer path (the compute/training path).
+
+    Returns:
+      (..., Sq, Sk) float32 (device model) or int32 (exact) scores in [-d, d].
+    """
+    d = qb.shape[-1]
+    if exact and adc_bits is None and noise_sigma == 0.0:
+        qp, kp = pack_bits(qb), pack_bits(kb)
+        return hamming_scores_packed(qp, kp, d)
+
+    if d % cam_w != 0:
+        raise ValueError(f"d={d} must tile by cam_w={cam_w}")
+    n_tiles = d // cam_w
+    qt = qb.reshape(*qb.shape[:-1], n_tiles, cam_w)
+    kt = kb.reshape(*kb.shape[:-1], n_tiles, cam_w)
+    # matches per vertical tile: (d + dot)/2 restricted to the tile.
+    # (einsum ellipsis broadcasting handles GQA's inserted group axis)
+    dots = jnp.einsum("...qtc,...ktc->...qkt", qt, kt)
+    matches = (dots + cam_w) * 0.5  # in [0, cam_w]
+    if noise_sigma > 0.0:
+        if rng is None:
+            raise ValueError("noise_sigma > 0 requires rng")
+        matches = matches + noise_sigma * cam_w * jax.random.normal(
+            rng, matches.shape, dtype=jnp.float32
+        )
+        matches = jnp.clip(matches, 0.0, float(cam_w))
+    if adc_bits is not None:
+        matches = adc_readout(matches, cam_w=cam_w, bits=adc_bits)
+    # Signed mapping s = 2*count - cam_w, accumulated digitally across tiles.
+    return (2.0 * matches - cam_w).sum(axis=-1)

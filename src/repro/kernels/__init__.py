@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for CAMformer hot spots + jnp oracles.
+
+Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
+validated on CPU in interpret mode.  See ops.py for dispatch wrappers and
+ref.py for the oracles.
+"""
+
+from repro.kernels import ops, ref
+from repro.kernels.bacam_mvm import bacam_mvm
+from repro.kernels.bacam_topk import bacam_topk_stage1
+from repro.kernels.bitslice_vmm import bitslice_vmm
+from repro.kernels.flash_attention import flash_attention
+
+__all__ = [
+    "ops",
+    "ref",
+    "bacam_mvm",
+    "bacam_topk_stage1",
+    "bitslice_vmm",
+    "flash_attention",
+]

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel: fused BA-CAM scoring + stage-1 hierarchical top-k.
+
+This fuses the paper's *Association* stage exactly as the hardware pipelines
+it (Sec. III-B1): while the BA-CAM scans key tiles, a bitonic top-2 keeps the
+best `stage1_k` scores per tile of `group_size`(=CAM_H=16) keys, and ONLY the
+candidates leave the stage.  On TPU the same fusion is a memory-traffic
+optimization: the (R, Skv) score matrix never reaches HBM — per key-group
+only `stage1_k` (value, index) pairs are written, an 8x/16x reduction in
+score traffic (2*16/4 bytes per 16 keys vs 64 bytes).
+
+Masking (causal / sliding window / valid-cache-length) is applied in-kernel
+from query positions, so the kernel also serves decode (R=1 row per query)
+against a partially-filled cache.
+
+VMEM (defaults bq=256, bk=512, W<=8): scores acc 512 KiB + operands ~24 KiB
++ candidate blocks (256 x 64 x 4 B x 2) 128 KiB  =>  < 1 MiB of 16 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import MASKED_SCORE
+
+
+def _kernel(
+    q_ref,
+    k_ref,
+    pos_ref,
+    kvlen_ref,
+    vals_ref,
+    idx_ref,
+    *,
+    d: int,
+    words: int,
+    group: int,
+    stage1_k: int,
+    block_k: int,
+    causal: bool,
+    window: int | None,
+):
+    bq = q_ref.shape[1]
+    bk = k_ref.shape[1]
+    j = pl.program_id(2)
+
+    # --- BA-CAM scoring (see bacam_mvm.py) ---
+    acc = jnp.zeros((bq, bk), jnp.int32)
+    for w in range(words):
+        x = jnp.bitwise_xor(q_ref[0, :, w][:, None], k_ref[0, :, w][None, :])
+        acc = acc + jax.lax.population_count(x).astype(jnp.int32)
+    scores = jnp.int32(d) - 2 * acc
+
+    # --- masking from positions (matchline "search enable" in hardware) ---
+    kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    qpos = pos_ref[0][:, None]
+    ok = kpos < kvlen_ref[0, 0]
+    if causal:
+        ok = jnp.logical_and(ok, kpos <= qpos)
+    if window is not None:
+        ok = jnp.logical_and(ok, kpos > qpos - window)
+    scores = jnp.where(ok, scores, MASKED_SCORE)
+
+    # --- stage-1 top-k per group of `group` keys (bitonic top-2 dual) ---
+    ngroups = bk // group
+    sg = scores.reshape(bq, ngroups, group)
+    gidx = jax.lax.broadcasted_iota(jnp.int32, (bq, ngroups, group), 2)
+    vals, idxs = [], []
+    cur = sg
+    for _ in range(stage1_k):  # sequential max-extraction == stable top-k
+        m = cur.max(axis=-1)
+        am = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        vals.append(m)
+        idxs.append(am)
+        cur = jnp.where(gidx == am[..., None], MASKED_SCORE, cur)
+    v = jnp.stack(vals, axis=-1).reshape(bq, ngroups * stage1_k)
+    base = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, ngroups), 1) * group
+    gi = jnp.stack([base + a for a in idxs], axis=-1).reshape(bq, ngroups * stage1_k)
+    vals_ref[0] = v
+    idx_ref[0] = gi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "d", "group", "stage1_k", "causal", "window", "block_q", "block_k", "interpret",
+    ),
+)
+def bacam_topk_stage1(
+    q_packed: jax.Array,
+    k_packed: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    d: int,
+    group: int = 16,
+    stage1_k: int = 2,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+    interpret: bool = True,
+):
+    """Fused binary scores + stage-1 top-k.
+
+    Args:
+      q_packed: (B, R, W) uint32;  k_packed: (B, Skv, W) uint32.
+      q_pos: (B, R) int32 query positions (masking); kv_len: (B, 1) int32
+        number of valid keys (rest of the padded cache is masked).
+
+    Returns:
+      (cand_vals, cand_idx): (B, R, stage1_k*Skv/group) int32; masked
+      candidates hold MASKED_SCORE.  Group-major, top-k-minor order
+      (matches ref.bacam_topk_stage1_ref).
+    """
+    b, r, words = q_packed.shape
+    skv = k_packed.shape[1]
+    assert words * 32 == d
+    assert r % block_q == 0 and skv % block_k == 0 and block_k % group == 0
+    grid = (b, r // block_q, skv // block_k)
+    ncand_blk = stage1_k * (block_k // group)
+    ncand = stage1_k * (skv // group)
+    kern = functools.partial(
+        _kernel,
+        d=d, words=words, group=group, stage1_k=stage1_k,
+        block_k=block_k, causal=causal, window=window,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, words), lambda b_, i, j: (b_, i, 0)),
+            pl.BlockSpec((1, block_k, words), lambda b_, i, j: (b_, j, 0)),
+            pl.BlockSpec((1, block_q), lambda b_, i, j: (b_, i)),
+            pl.BlockSpec((1, 1), lambda b_, i, j: (b_, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, ncand_blk), lambda b_, i, j: (b_, i, j)),
+            pl.BlockSpec((1, block_q, ncand_blk), lambda b_, i, j: (b_, i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r, ncand), jnp.int32),
+            jax.ShapeDtypeStruct((b, r, ncand), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q_packed, k_packed, q_pos, kv_len)

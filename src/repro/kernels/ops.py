@@ -1,0 +1,169 @@
+"""Jit'd dispatch wrappers for the Pallas kernels.
+
+These present kernel functionality with framework-friendly shapes (padding,
+GQA folding, batch flattening) and select interpret mode automatically:
+interpret=True off-TPU (this container), compiled Mosaic on real TPU.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bacam import pack_bits
+from repro.core.topk import NEG_INF
+from repro.kernels import bacam_mvm as _mvm
+from repro.kernels import bacam_topk as _btk
+from repro.kernels import bitslice_vmm as _bsv
+from repro.kernels import flash_attention as _fla
+from repro.kernels.ref import MASKED_SCORE
+
+__all__ = [
+    "INTERPRET",
+    "bacam_scores",
+    "bacam_attention_scores_topk",
+    "bacam_attention_scores_topk_packed",
+    "flash_attention",
+    "bitslice_vmm",
+    "MASKED_SCORE",
+]
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_block(n: int, target: int, quantum: int = 8) -> int:
+    """Block size: `target` for large inputs, padded-n for small ones."""
+    return min(target, _ceil_to(max(n, 1), quantum))
+
+
+def _pad_axis(x: jax.Array, axis: int, to: int, value=0):
+    pad = to - x.shape[axis]
+    if pad <= 0:
+        return x
+    cfg = [(0, 0)] * x.ndim
+    cfg[axis] = (0, pad)
+    return jnp.pad(x, cfg, constant_values=value)
+
+
+def bacam_scores(qb: jax.Array, kb: jax.Array, *, block_q=256, block_k=512) -> jax.Array:
+    """Binary scores via the Pallas BA-CAM kernel.
+
+    qb: (B*, R, D) ±1; kb: (B*, Skv, D) ±1 (3-D; callers fold GQA/batch).
+    Returns (B*, R, Skv) int32.
+    """
+    b, r, d = qb.shape
+    skv = kb.shape[1]
+    bq = _pick_block(r, block_q)
+    bk = _pick_block(skv, block_k)
+    qp = _pad_axis(pack_bits(qb), 1, _ceil_to(r, bq))
+    kp = _pad_axis(pack_bits(kb), 1, _ceil_to(skv, bk))
+    s = _mvm.bacam_mvm(qp, kp, d=d, block_q=bq, block_k=bk, interpret=INTERPRET)
+    return s[:, :r, :skv]
+
+
+def bacam_attention_scores_topk(
+    qb: jax.Array,
+    kb: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    group: int = 16,
+    stage1_k: int = 2,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+):
+    """Fused association stage: binary scores + stage-1 top-k candidates.
+
+    qb: (B, R, D) ±1; kb: (B, Skv, D) ±1; q_pos: (B, R) int32;
+    kv_len: (B,) or (B, 1) int32.
+
+    Returns (cand_vals f32 with NEG_INF at masked, cand_idx i32), shapes
+    (B, R, stage1_k * ceil(Skv/group)).
+    """
+    d = qb.shape[-1]
+    return bacam_attention_scores_topk_packed(
+        pack_bits(qb), pack_bits(kb), q_pos, kv_len, d=d,
+        group=group, stage1_k=stage1_k, causal=causal, window=window,
+        block_q=block_q, block_k=block_k,
+    )
+
+
+def bacam_attention_scores_topk_packed(
+    qp: jax.Array,
+    kp: jax.Array,
+    q_pos: jax.Array,
+    kv_len: jax.Array,
+    *,
+    d: int,
+    group: int = 16,
+    stage1_k: int = 2,
+    causal: bool = True,
+    window: int | None = None,
+    block_q: int = 256,
+    block_k: int = 512,
+):
+    """As bacam_attention_scores_topk but on pre-packed uint32 operands
+    (the CAMformer KV-cache layout stores keys packed)."""
+    b, r, _ = qp.shape
+    skv = kp.shape[1]
+    bq = _pick_block(r, block_q)
+    bk = _pick_block(skv, block_k, quantum=group)
+    bk = _ceil_to(bk, group)
+    qp = _pad_axis(qp, 1, _ceil_to(r, bq))
+    kp = _pad_axis(kp, 1, _ceil_to(skv, bk))
+    pos = _pad_axis(q_pos.astype(jnp.int32), 1, _ceil_to(r, bq))
+    kvl = jnp.reshape(kv_len.astype(jnp.int32), (b, 1))
+    vals, idx = _btk.bacam_topk_stage1(
+        qp, kp, pos, kvl,
+        d=d, group=group, stage1_k=stage1_k, causal=causal, window=window,
+        block_q=bq, block_k=bk, interpret=INTERPRET,
+    )
+    ncand = stage1_k * (-(-skv // group))
+    vals = vals[:, :r, :ncand]
+    idx = idx[:, :r, :ncand]
+    fvals = jnp.where(vals <= MASKED_SCORE // 2, NEG_INF, vals.astype(jnp.float32))
+    return fvals, jnp.minimum(idx, skv - 1)
+
+
+def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None, scale=None,
+                    block_q=512, block_k=512):
+    """Dense flash attention; q: (B*, Sq, D), k/v: (B*, Skv, D)."""
+    b, sq, d = q.shape
+    skv = k.shape[1]
+    bq = _pick_block(sq, block_q)
+    bk = _pick_block(skv, block_k)
+    qq = _pad_axis(q, 1, _ceil_to(sq, bq))
+    kk = _pad_axis(k, 1, _ceil_to(skv, bk))
+    vv = _pad_axis(v, 1, _ceil_to(skv, bk))
+    # Padded keys are masked because their kpos >= skv > every real qpos
+    # only under causal; for non-causal we must mask explicitly via window
+    # trick — instead pad K with +inf-distance: set padded kpos invalid by
+    # passing kv length through the causal offset. Simplest robust route:
+    # pad then slice, masking padded keys via a large negative bias on V=0
+    # and K=0 — K=0 gives logits 0 which would leak. So: only allow padding
+    # under causal=True or when skv is already aligned.
+    if kk.shape[1] != skv and not causal:
+        raise ValueError("non-causal flash requires Skv % block_k == 0")
+    out = _fla.flash_attention(
+        qq, kk, vv, q_offset, causal=causal, window=window, scale=scale,
+        block_q=bq, block_k=bk, interpret=INTERPRET,
+    )
+    return out[:, :sq]
+
+
+def bitslice_vmm(x_pm1, w_int, *, bits, block_q=256, block_k=512):
+    """Exact int VMM via bit slicing; x: (B,R,d) ±1, w_int: (B,N,d)."""
+    b, r, d = x_pm1.shape
+    n = w_int.shape[1]
+    bq = _pick_block(r, block_q)
+    bk = _pick_block(n, block_k)
+    x = _pad_axis(x_pm1, 1, _ceil_to(r, bq), value=1)
+    w = _pad_axis(w_int, 1, _ceil_to(n, bk))
+    y = _bsv.bitslice_vmm(x, w, bits=bits, block_q=bq, block_k=bk, interpret=INTERPRET)
+    return y[:, :r, :n]

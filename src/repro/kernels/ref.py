@@ -1,0 +1,118 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the bit-exact (or numerically-reference) semantics the
+kernels are tested against (tests/test_kernels.py sweeps shapes/dtypes and
+asserts allclose).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topk import NEG_INF
+
+MASKED_SCORE = -(2**30)  # integer "minus infinity" for masked binary scores
+
+
+def bacam_scores_ref(q_packed: jax.Array, k_packed: jax.Array, d: int) -> jax.Array:
+    """Binary QK^T from packed operands: s = d - 2*popcount(q ^ k).
+
+    q_packed: (B, R, W) uint32;  k_packed: (B, Skv, W) uint32.
+    Returns (B, R, Skv) int32.
+    """
+    x = jnp.bitwise_xor(q_packed[:, :, None, :], k_packed[:, None, :, :])
+    mism = jax.lax.population_count(x).astype(jnp.int32).sum(-1)
+    return jnp.int32(d) - 2 * mism
+
+
+def masked_scores_ref(
+    scores: jax.Array,
+    q_pos: jax.Array,
+    *,
+    causal: bool,
+    window: int | None,
+    kv_len: jax.Array | int,
+) -> jax.Array:
+    """Apply causal/window/validity masking with the integer sentinel."""
+    b, r, skv = scores.shape
+    kpos = jnp.arange(skv, dtype=jnp.int32)[None, None, :]
+    qpos = q_pos[:, :, None]
+    ok = kpos < jnp.asarray(kv_len, jnp.int32).reshape(-1, 1, 1)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, scores, MASKED_SCORE)
+
+
+def bacam_topk_stage1_ref(
+    q_packed: jax.Array,
+    k_packed: jax.Array,
+    d: int,
+    q_pos: jax.Array,
+    *,
+    group_size: int = 16,
+    stage1_k: int = 2,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: jax.Array | int | None = None,
+):
+    """Oracle for the fused score + stage-1 top-k kernel.
+
+    Returns (cand_vals, cand_idx): (B, R, stage1_k * Skv/group) int32 —
+    per group of `group_size` keys the top `stage1_k` masked scores and
+    their global key indices, groups in order (hardware tile order).
+    """
+    b, r, _ = q_packed.shape
+    skv = k_packed.shape[1]
+    if kv_len is None:
+        kv_len = skv
+    s = bacam_scores_ref(q_packed, k_packed, d)
+    s = masked_scores_ref(s, q_pos, causal=causal, window=window, kv_len=kv_len)
+    groups = skv // group_size
+    sg = s.reshape(b, r, groups, group_size)
+    v, i = jax.lax.top_k(sg, stage1_k)  # (B,R,G,s1)
+    gi = i.astype(jnp.int32) + (jnp.arange(groups, dtype=jnp.int32) * group_size)[
+        None, None, :, None
+    ]
+    return v.reshape(b, r, groups * stage1_k), gi.reshape(b, r, groups * stage1_k)
+
+
+def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, scale=None, window=None):
+    """Naive softmax attention, (B, S, D) per-head layout.
+
+    q: (B, Sq, D); k,v: (B, Skv, D).  q row i has position q_offset + i.
+    """
+    b, sq, d = q.shape
+    skv = k.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq, dtype=jnp.int32)[:, None] + q_offset
+    kpos = jnp.arange(skv, dtype=jnp.int32)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def bitslice_vmm_ref(x: jax.Array, w_int: jax.Array, bits: int) -> jax.Array:
+    """Oracle for bit-sliced binary-integer VMM:  y = x @ w_int.
+
+    x: (B, R, d) in {-1,+1}; w_int: (B, N, d) signed ints representable in
+    `bits` two's-complement bits.  Returns (B, R, N) int32 — exact.
+    """
+    return jnp.einsum(
+        "brd,bnd->brn", x.astype(jnp.int32), w_int.astype(jnp.int32)
+    )
+
+
+def int_slices(w_int: jax.Array, bits: int) -> jax.Array:
+    """Two's-complement bit planes of w_int: (bits, ...) uint32 in {0,1}."""
+    u = w_int.astype(jnp.int32).astype(jnp.uint32)
+    return jnp.stack([(u >> s) & jnp.uint32(1) for s in range(bits)], axis=0)

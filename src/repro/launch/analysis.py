@@ -1,0 +1,78 @@
+"""Roofline-term derivation from a compiled dry-run artifact.
+
+Hardware constants (assignment): TPU v5e-class chip —
+  197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+
+Conventions (post-SPMD HLO shapes are PER-DEVICE):
+  compute term    = per_device_FLOPs / peak_FLOPs        [s]
+  memory term     = per_device_dot_bytes / HBM_bw        [s]
+  collective term = per_device_collective_bytes / link_bw [s]
+(equivalent to the assignment's global/(chips*rate) forms.)
+
+MODEL_FLOPS follows the assignment: 6*N*D for training (N = active params,
+D = global tokens), 2*N*D for inference passes.
+"""
+
+from __future__ import annotations
+
+import math
+
+from repro.configs.base import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+__all__ = ["roofline_terms", "model_flops", "active_params",
+           "PEAK_FLOPS", "HBM_BW", "LINK_BW"]
+
+
+def active_params(cfg, total_params: int) -> int:
+    """Active parameter count (MoE: experts_per_token of n_experts)."""
+    if not cfg.n_experts:
+        return total_params
+    per_expert = 3 * cfg.d_model * cfg.d_ff  # gated GLU expert
+    all_expert = cfg.n_layers * cfg.n_experts * per_expert
+    used_expert = cfg.n_layers * cfg.experts_per_token * per_expert
+    return total_params - all_expert + used_expert
+
+
+def model_flops(cfg, shape_name: str, total_params: int) -> float:
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    n_act = active_params(cfg, total_params)
+    if sh["kind"] == "train":
+        tokens = b * s
+        return 6.0 * n_act * tokens
+    if sh["kind"] == "prefill":
+        return 2.0 * n_act * b * s
+    # decode: one token per sequence per step
+    return 2.0 * n_act * b
+
+
+def roofline_terms(hlo_stats: dict, cfg, shape_name: str, total_params: int,
+                   chips: int) -> dict:
+    per_dev_flops = hlo_stats["flops"]
+    per_dev_bytes = hlo_stats["dot_bytes"]
+    per_dev_coll = hlo_stats["collective_bytes"]
+    t_compute = per_dev_flops / PEAK_FLOPS
+    t_memory = per_dev_bytes / HBM_BW
+    t_collective = per_dev_coll / LINK_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_name, total_params)
+    hlo_global_flops = per_dev_flops * chips
+    return {
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "bound_step_time_s": max(terms.values()),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global_flops,
+        "useful_flops_ratio": (mf / hlo_global_flops) if hlo_global_flops else 0.0,
+        "roofline_fraction": (
+            (mf / PEAK_FLOPS / chips) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+        "per_device": {"flops": per_dev_flops, "dot_bytes": per_dev_bytes,
+                       "collective_bytes": per_dev_coll},
+    }

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x shape) dry-run cell.
+
+`input_specs()` returns (tree of ShapeDtypeStruct, tree of logical axes) for
+the given workload kind — weak-type-correct, shardable, no device
+allocation.  Modality frontends are stubs per the assignment: audio cells
+get precomputed frame embeddings, VLM cells get patch embeddings.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES
+
+__all__ = ["input_specs", "serve_input_specs", "batch_axes"]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg, shape_name: str):
+    """Train/prefill batch specs. Returns (specs, axes) trees (dicts)."""
+    sh = SHAPES[shape_name]
+    b, s = sh["global_batch"], sh["seq_len"]
+    specs = {}
+    axes = {}
+    s_text = s
+    if cfg.family == "vlm":
+        s_text = s - cfg.n_patches  # patches + text fill the assigned seq
+        specs["image_embeds"] = _sds((b, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+        axes["image_embeds"] = ("batch", None, "embed")
+    if cfg.family == "audio":
+        specs["audio_features"] = _sds((b, cfg.enc_len, cfg.d_model), jnp.bfloat16)
+        axes["audio_features"] = ("batch", None, "embed")
+    specs["tokens"] = _sds((b, s_text), jnp.int32)
+    axes["tokens"] = ("batch", "seq")
+    if sh["kind"] == "train":
+        specs["labels"] = _sds((b, s_text), jnp.int32)
+        axes["labels"] = ("batch", "seq")
+        specs["loss_mask"] = _sds((b, s_text), jnp.float32)
+        axes["loss_mask"] = ("batch", "seq")
+    return specs, axes
+
+
+def serve_input_specs(cfg, shape_name: str):
+    """Decode-step inputs: one new token against a seq_len cache."""
+    sh = SHAPES[shape_name]
+    b = sh["global_batch"]
+    specs = {
+        "tokens": _sds((b,), jnp.int32),
+        "pos": _sds((b,), jnp.int32),
+        "kv_len": _sds((b,), jnp.int32),
+    }
+    axes = {"tokens": ("batch",), "pos": ("batch",), "kv_len": ("batch",)}
+    return specs, axes
+
+
+def batch_axes(cfg, shape_name: str):
+    return input_specs(cfg, shape_name)[1]

@@ -1,0 +1,47 @@
+"""Serving driver: batched decode with continuous batching.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch camformer-bert --smoke \
+        --requests 12 --max-new 24 [--attn-mode camformer]
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--attn-mode", default=None)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.attn_mode:
+        cfg = cfg.replace(attn_mode=args.attn_mode)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
+                      max_len=args.max_len)
+    rng = jax.random.PRNGKey(7)
+    for i in range(args.requests):
+        rng, sub = jax.random.split(rng)
+        plen = 4 + int(jax.random.randint(sub, (), 0, 12))
+        prompt = list(map(int, jax.random.randint(sub, (plen,), 0, cfg.vocab)))
+        eng.submit(Request(prompt=prompt, max_new_tokens=args.max_new, rid=i))
+    done = eng.run()
+    for r in sorted(done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,166 @@
+"""Step functions (train / prefill / serve) + sharding assembly.
+
+Everything the dry-run, trainer, and server share: jit-able step closures
+over a ModelDef, and the (ShapeDtypeStruct, NamedSharding) trees for every
+argument, derived from logical axes via sharding/partitioning.py.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.inputs import input_specs, serve_input_specs
+from repro.models.module import param_shapes, tree_axes
+from repro.models.transformer import dtype_of
+from repro.sharding.partitioning import (ACT_RULES, CACHE_RULES, PARAM_RULES,
+                                         tree_pspecs)
+from repro.train.optimizer import adamw, cosine_schedule
+
+__all__ = [
+    "cast_params", "make_train_step", "make_prefill_step", "make_serve_step",
+    "state_specs", "batch_specs", "cache_specs_trees", "named",
+]
+
+
+def cast_params(params, dtype):
+    """Compute-precision copy (cast the sharded fp32 masters once per step,
+    BEFORE consumption, so GSPMD gathers bf16 — halves FSDP traffic)."""
+    return jax.tree.map(
+        lambda p: p.astype(dtype) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+        params)
+
+
+def named(mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------- step factories ----------------
+
+def make_train_step(md, cfg, *, peak_lr=3e-4, warmup=2000, total_steps=100_000,
+                    accum: int = 1):
+    """Returns (train_step, optimizer).  state = {params, opt}."""
+    opt = adamw(cosine_schedule(peak_lr, warmup, total_steps))
+    dt = dtype_of(cfg)
+
+    def loss_fn(params, batch):
+        return md.loss(cast_params(params, dt), batch, cfg)
+
+    from repro.models.module import tree_axes
+    from repro.sharding.partitioning import constrain as _constrain
+
+    grad_axes = tree_axes(md.specs(cfg))
+
+    def _shard_grads(grads):
+        # Constrain gradients to the parameter sharding at the autodiff
+        # boundary so the partitioner emits reduce-scatter (not all-reduce
+        # + slice) for the FSDP gradient sync.
+        return jax.tree.map(
+            lambda g, ax: _constrain(g, ax, PARAM_RULES), grads, grad_axes)
+
+    def train_step(state, batch):
+        if accum == 1:
+            (loss, aux), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                state["params"], batch)
+            grads = _shard_grads(grads)
+        else:  # microbatched gradient accumulation
+            def micro(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state["params"], mb)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                 state["params"])
+            mbs = jax.tree.map(
+                lambda x: x.reshape(accum, x.shape[0] // accum, *x.shape[1:]),
+                batch)
+            (grads, loss), _ = jax.lax.scan(micro, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, grads)
+            loss, aux = loss / accum, {}
+        new_params, opt_state, ostats = opt.update(grads, state["opt"],
+                                                   state["params"])
+        raw = {"loss": loss, **ostats, **aux}
+        metrics = {k: jnp.asarray(raw.get(k, 0.0), jnp.float32)
+                   for k in METRIC_KEYS}
+        return {"params": new_params, "opt": opt_state}, metrics
+
+    return train_step, opt
+
+
+METRIC_KEYS = ("loss", "grad_norm", "lr", "ce", "tokens",
+               "moe_aux_loss", "moe_drop_frac")
+
+
+def make_prefill_step(md, cfg):
+    dt = dtype_of(cfg)
+
+    def prefill_step(params, batch, caches):
+        return md.prefill(cast_params(params, dt), batch, caches, cfg)
+
+    return prefill_step
+
+
+def make_serve_step(md, cfg):
+    dt = dtype_of(cfg)
+
+    def serve_step(params, tokens, pos, kv_len, caches):
+        return md.decode(cast_params(params, dt), tokens, pos, kv_len,
+                         caches, cfg)
+
+    return serve_step
+
+
+# ---------------- sharding assembly ----------------
+
+def params_specs(md, cfg, mesh, *, serve: bool = False):
+    from repro.sharding.partitioning import SERVE_PARAM_RULES
+
+    specs = md.specs(cfg)
+    # serving loads bf16 weights (the standard deployment format); training
+    # holds fp32 masters and casts a bf16 compute copy per step.
+    shapes = param_shapes(specs, dtype_of(cfg) if serve else jnp.float32)
+    rules = SERVE_PARAM_RULES if serve else PARAM_RULES
+    pspecs = tree_pspecs(tree_axes(specs), shapes, mesh, rules)
+    return shapes, named(mesh, pspecs)
+
+
+def state_specs(md, cfg, mesh):
+    """(SDS tree, sharding tree) for the full train state."""
+    shapes, pshard = params_specs(md, cfg, mesh)
+    scalar = jax.ShapeDtypeStruct((), jnp.int32)
+    sds = {"params": shapes,
+           "opt": {"m": shapes, "v": shapes, "step": scalar}}
+    shard = {"params": pshard,
+             "opt": {"m": pshard, "v": pshard,
+                     "step": NamedSharding(mesh, P())}}
+    return sds, shard
+
+
+def batch_specs(cfg, shape_name, mesh, *, serve=False):
+    specs, axes = (serve_input_specs if serve else input_specs)(cfg, shape_name)
+    from repro.sharding.partitioning import resolve_spec
+
+    shard = {k: NamedSharding(mesh, resolve_spec(axes[k], specs[k].shape, mesh,
+                                                 ACT_RULES))
+             for k in specs}
+    return specs, shard
+
+
+_IS_CACHE_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
+                            and isinstance(x[0], jax.ShapeDtypeStruct))
+
+
+def cache_specs_trees(md, cfg, batch: int, cache_len: int, mesh):
+    tree = md.cache_specs(cfg, batch, cache_len)
+    sds = jax.tree.map(lambda t: t[0], tree, is_leaf=_IS_CACHE_LEAF)
+    axes = jax.tree.map(lambda t: t[1], tree, is_leaf=_IS_CACHE_LEAF)
+    from repro.sharding.partitioning import resolve_spec
+
+    shard = jax.tree.map(
+        lambda t: NamedSharding(mesh, resolve_spec(t[1], t[0].shape, mesh,
+                                                   CACHE_RULES)),
+        tree, is_leaf=_IS_CACHE_LEAF)
+    return sds, shard

@@ -1,0 +1,80 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-moe-3b-a800m \
+        --smoke --steps 50 [--devices 8 --model-parallel 2]
+
+On this CPU container use --smoke (reduced config); on a real slice drop it
+and the assigned config trains on the production mesh.  XLA latency-hiding
+flags for collective/compute overlap are set here (they only matter on
+real hardware; harmless on CPU).
+"""
+
+import argparse
+import os
+
+# Compute/communication overlap: enable XLA's latency-hiding scheduler and
+# async collectives before backend init (no-ops on CPU, critical on TPU).
+os.environ.setdefault(
+    "LIBTPU_INIT_ARGS",
+    "--xla_enable_async_all_gather=true --xla_enable_async_all_reduce=true")
+_flags = os.environ.get("XLA_FLAGS", "")
+if "--xla_force_host_platform_device_count" not in _flags:
+    dev = os.environ.get("REPRO_HOST_DEVICES")
+    if dev:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={dev} " + _flags)
+
+import jax  # noqa: E402
+
+from repro.configs import get_config, smoke_config  # noqa: E402
+from repro.launch.mesh import make_mesh_for, make_production_mesh  # noqa: E402
+from repro.models import get_model_def  # noqa: E402
+from repro.train.data import SyntheticLMData  # noqa: E402
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attn-mode", default=None)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.attn_mode:
+        cfg = cfg.replace(attn_mode=args.attn_mode)
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+    else:
+        n = args.devices or len(jax.devices())
+        mesh = make_mesh_for(n, args.model_parallel)
+
+    md = get_model_def(cfg)
+    shape = args.shape
+    if args.smoke:
+        from repro.configs.base import SHAPES
+        SHAPES["smoke"] = dict(seq_len=128, global_batch=max(
+            8, mesh.shape.get("data", 1)), kind="train")
+        shape = "smoke"
+
+    data = SyntheticLMData(cfg, shape, mesh)
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=args.ckpt_every,
+                         ckpt_dir=args.ckpt_dir)
+    trainer = Trainer(md, cfg, mesh, data, tcfg)
+    trainer.run()
+    for row in trainer.metrics_log:
+        print(row)
+    for ev in trainer.events:
+        print("event:", ev)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: one backbone per assigned architecture family."""
+
+from repro.models.registry import get_model_def  # noqa: F401
+from repro.models.transformer import ModelDef  # noqa: F401

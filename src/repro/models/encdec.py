@@ -1,0 +1,164 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+Per the assignment the conv/mel frontend is a STUB: `input_specs()` feeds
+precomputed frame embeddings (B, enc_len, d_model).  The transformer
+backbone is faithful: pre-LN layernorm blocks, GELU MLPs, MHA (kv = heads),
+sinusoidal positions, 24 encoder + 24 decoder layers at the assigned dims.
+
+CAMformer applies to both decoder self-attention (causal CAM search over the
+growing cache) and cross-attention (paper Sec. IV-C: "encoder-decoder models
+via non-causal search over encoder keys").
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import (attn_cache_spec, attn_specs,
+                                    attention_block, spec_from_cfg)
+from repro.models.transformer import ModelDef, _last_logits, dtype_of, stack_specs
+from repro.sharding.partitioning import constrain
+
+__all__ = ["make_model_def"]
+
+
+def _enc_block_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "attn": attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg)}
+
+
+def _dec_block_specs(cfg):
+    return {
+        "ln1": L.norm_specs(cfg), "self_attn": attn_specs(cfg),
+        "ln_cross": L.norm_specs(cfg), "cross_attn": attn_specs(cfg),
+        "ln2": L.norm_specs(cfg), "mlp": L.mlp_specs(cfg),
+    }
+
+
+def specs(cfg):
+    return {
+        "embed": L.embed_specs(cfg),
+        "enc_blocks": stack_specs(_enc_block_specs(cfg), cfg.enc_layers),
+        "enc_ln_f": L.norm_specs(cfg),
+        "dec_blocks": stack_specs(_dec_block_specs(cfg), cfg.n_layers),
+        "ln_f": L.norm_specs(cfg),
+    }
+
+
+def encode(params, features, cfg):
+    """features: (B, enc_len, d_model) stub frame embeddings -> memory."""
+    dt = dtype_of(cfg)
+    b, s, _ = features.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = features.astype(dt) + L.sinusoidal_positions(pos, cfg.d_model).astype(dt)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    def body(h, layer_p):
+        a, _ = attention_block(layer_p["attn"], L.apply_norm(layer_p["ln1"], h, cfg),
+                               cfg, positions=pos, causal=False)
+        h = h + a
+        h = h + L.apply_mlp(layer_p["mlp"], L.apply_norm(layer_p["ln2"], h, cfg), cfg)
+        return constrain(h, ("batch", "seq", "embed")), None
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(params["enc_ln_f"], x, cfg)
+
+
+def _cross_kv(p, memory, cfg):
+    """Precompute cross-attention K/V from encoder memory (per layer)."""
+    dt = memory.dtype
+    b, s, _ = memory.shape
+    k = (memory @ p["wk"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (memory @ p["wv"].astype(dt)).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    return k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+
+
+def _decode_stack(params, tokens, cfg, memory, caches, *, positions,
+                  cache_index, kv_len, train=False):
+    dt = dtype_of(cfg)
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, cfg, dt)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(dt)
+
+    def body(h, xs):
+        if train:
+            layer_p = xs
+            layer_c = None
+        else:
+            layer_p, layer_c = xs
+        a, new_c = attention_block(
+            layer_p["self_attn"], L.apply_norm(layer_p["ln1"], h, cfg), cfg,
+            positions=positions, cache=layer_c, cache_index=cache_index,
+            kv_len=kv_len, causal=True)
+        h = h + a
+        ckv = _cross_kv(layer_p["cross_attn"], memory, cfg)
+        a, _ = attention_block(
+            layer_p["cross_attn"], L.apply_norm(layer_p["ln_cross"], h, cfg),
+            cfg, positions=positions, cross_kv=ckv)
+        h = h + a
+        h = h + L.apply_mlp(layer_p["mlp"], L.apply_norm(layer_p["ln2"], h, cfg), cfg)
+        h = constrain(h, ("batch", "seq", "embed"))
+        return h, new_c
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    xs = params["dec_blocks"] if train else (params["dec_blocks"], caches["self"])
+    x, new_self = jax.lax.scan(body, x, xs)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    if not train:
+        caches = dict(caches)
+        caches["self"] = new_self
+    return x, caches
+
+
+def cache_specs(cfg, batch: int, cache_len: int):
+    dt = dtype_of(cfg)
+    one = attn_cache_spec(cfg, batch, cache_len, dt)
+    return {
+        "self": {k: (jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+                     ("layers",) + ax) for k, (s, ax) in one.items()},
+        # encoder memory re-used every decode step (cross K/V derive from it)
+        "memory": (jax.ShapeDtypeStruct((batch, cfg.enc_len, cfg.d_model), dt),
+                   ("batch", "kv_seq", "embed")),
+    }
+
+
+def loss(params, batch, cfg):
+    """batch: audio_features (B, enc_len, d), tokens/labels (B, S)."""
+    memory = encode(params, batch["audio_features"], cfg)
+    x, _ = _decode_stack(params, batch["tokens"], cfg, memory, None,
+                         positions=None, cache_index=None, kv_len=None,
+                         train=True)
+    return L.chunked_cross_entropy(x, params["embed"], batch["labels"], cfg,
+                                   loss_mask=batch.get("loss_mask"))
+
+
+def prefill(params, batch, caches, cfg):
+    memory = encode(params, batch["audio_features"], cfg)
+    caches = dict(caches)
+    caches["memory"] = memory.astype(caches["memory"].dtype)
+    x, caches = _decode_stack(params, batch["tokens"], cfg, memory, caches,
+                              positions=None, cache_index=jnp.int32(0),
+                              kv_len=None)
+    return _last_logits(params, x, cfg), caches
+
+
+def decode(params, tokens, pos, kv_len, caches, cfg):
+    b = tokens.shape[0]
+    positions = pos.reshape(b, 1).astype(jnp.int32)
+    x, caches = _decode_stack(
+        params, tokens.reshape(b, 1), cfg, caches["memory"], caches,
+        positions=positions, cache_index=pos.astype(jnp.int32),
+        kv_len=kv_len.astype(jnp.int32))
+    return _last_logits(params, x, cfg), caches
+
+
+def make_model_def():
+    return ModelDef(specs=specs, loss=loss, prefill=prefill, decode=decode,
+                    cache_specs=cache_specs)

@@ -1,0 +1,172 @@
+"""Shared model layers: norms, RoPE, MLPs, embeddings, chunked CE loss."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Param
+from repro.sharding.partitioning import constrain
+
+__all__ = [
+    "norm_specs", "apply_norm", "rope", "sinusoidal_positions",
+    "mlp_specs", "apply_mlp", "embed_specs", "embed_lookup",
+    "chunked_cross_entropy",
+]
+
+
+# ---------------- norms ----------------
+
+def norm_specs(cfg, with_bias: bool | None = None):
+    with_bias = cfg.norm == "layer" if with_bias is None else with_bias
+    s = {"scale": Param((cfg.d_model,), (None,), init="ones")}
+    if with_bias:
+        s["bias"] = Param((cfg.d_model,), (None,), init="zeros")
+    return s
+
+
+def apply_norm(p, x, cfg, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layer":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    else:  # rms
+        var = (xf**2).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------- positions ----------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (B, H, S, D); positions: (B, S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, d: int) -> jax.Array:
+    """Whisper-style sinusoidal absolute embeddings. (B,S) -> (B,S,d)."""
+    half = d // 2
+    freqs = jnp.exp(-jnp.log(10000.0) * jnp.arange(half, dtype=jnp.float32) / (half - 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------- MLP ----------------
+
+def mlp_specs(cfg, d_ff: int | None = None):
+    d_ff = d_ff or cfg.d_ff
+    d = cfg.d_model
+    if cfg.act in ("silu", "geglu"):  # gated
+        return {
+            "w_gate": Param((d, d_ff), ("embed", "mlp")),
+            "w_up": Param((d, d_ff), ("embed", "mlp")),
+            "w_down": Param((d_ff, d), ("mlp", "embed")),
+        }
+    return {  # plain 2-layer (whisper)
+        "w_in": Param((d, d_ff), ("embed", "mlp")),
+        "b_in": Param((d_ff,), (None,), init="zeros"),
+        "w_out": Param((d_ff, d), ("mlp", "embed")),
+        "b_out": Param((d,), (None,), init="zeros"),
+    }
+
+
+def apply_mlp(p, x, cfg):
+    dt = x.dtype
+    if "w_gate" in p:
+        g = x @ p["w_gate"].astype(dt)
+        u = x @ p["w_up"].astype(dt)
+        g = constrain(g, ("batch", "seq", "mlp"))
+        act = jax.nn.silu(g) if cfg.act == "silu" else jax.nn.gelu(g)
+        return (act * u) @ p["w_down"].astype(dt)
+    h = x @ p["w_in"].astype(dt) + p["b_in"].astype(dt)
+    h = constrain(jax.nn.gelu(h), ("batch", "seq", "mlp"))
+    return h @ p["w_out"].astype(dt) + p["b_out"].astype(dt)
+
+
+# ---------------- embeddings / head ----------------
+
+def embed_specs(cfg):
+    v = cfg.padded_vocab  # pad columns are masked out of every logit
+    s = {"tok": Param((v, cfg.d_model), ("vocab", "embed"), init="embed",
+                      scale=cfg.d_model**-0.5)}
+    if not cfg.tie_embeddings:
+        s["head"] = Param((cfg.d_model, v), ("embed", "vocab"))
+    return s
+
+
+def embed_lookup(p, tokens, cfg, dtype):
+    e = jnp.take(p["tok"].astype(dtype), tokens, axis=0)
+    return constrain(e, ("batch", "seq", "embed"))
+
+
+def _head_matrix(embed_params, cfg, dtype):
+    if cfg.tie_embeddings:
+        return embed_params["tok"].astype(dtype).T
+    return embed_params["head"].astype(dtype)
+
+
+def chunked_cross_entropy(
+    x: jax.Array,
+    embed_params,
+    labels: jax.Array,
+    cfg,
+    *,
+    loss_mask: jax.Array | None = None,
+    chunk: int = 512,
+    z_loss: float = 1e-4,
+):
+    """Mean CE without materializing full (B, S, V) fp32 logits.
+
+    Scans over sequence chunks; per-chunk logits are vocab-sharded.  Returns
+    (loss, aux dict).  x: (B, S, d); labels: (B, S) int32.
+    """
+    b, s, d = x.shape
+    head = _head_matrix(embed_params, cfg, x.dtype)
+    if loss_mask is None:
+        loss_mask = jnp.ones((b, s), jnp.float32)
+    chunk = min(chunk, s)
+    n_chunks = s // chunk
+    rem = s - n_chunks * chunk
+
+    def chunk_loss(xc, yc, mc):
+        logits = xc @ head  # (B, c, V_padded)
+        logits = constrain(logits, ("batch", "seq", "vocab")).astype(jnp.float32)
+        if logits.shape[-1] > cfg.vocab:  # mask vocab-padding columns
+            pad_ok = jnp.arange(logits.shape[-1]) < cfg.vocab
+            logits = jnp.where(pad_ok, logits, -1e9)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        ce = (lse - gold) * mc
+        zl = z_loss * (lse**2) * mc
+        return ce.sum() + zl.sum(), (ce.sum(), mc.sum())
+
+    def body(carry, inputs):
+        tot, ce_tot, cnt = carry
+        xc, yc, mc = inputs
+        l, (ce, n) = chunk_loss(xc, yc, mc)
+        return (tot + l, ce_tot + ce, cnt + n), None
+
+    xs = (
+        x[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d).swapaxes(0, 1),
+        labels[:, : n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1),
+        loss_mask[:, : n_chunks * chunk].reshape(b, n_chunks, chunk).swapaxes(0, 1),
+    )
+    (tot, ce_tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0, 0.0), xs)
+    if rem:
+        l, (ce, n) = chunk_loss(x[:, -rem:], labels[:, -rem:], loss_mask[:, -rem:])
+        tot, ce_tot, cnt = tot + l, ce_tot + ce, cnt + n
+    cnt = jnp.maximum(cnt, 1.0)
+    return tot / cnt, {"ce": ce_tot / cnt, "tokens": cnt}

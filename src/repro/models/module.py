@@ -1,0 +1,81 @@
+"""Minimal functional parameter-spec system (no flax dependency).
+
+A model is (param_specs(cfg) -> tree of Param, apply(params, ...)).  Param
+records shape, dtype-agnostic init, and *logical axis names* used by
+sharding/partitioning.py to derive PartitionSpecs — the MaxText
+logical-axis-rules pattern, reduced to its essentials.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Param", "is_param", "init_params", "param_shapes", "tree_axes", "count_params"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names, len == ndim
+    init: str = "normal"  # normal | zeros | ones | embed
+    scale: Optional[float] = None  # stddev override (default: fan-in scaled)
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"axes {self.axes} don't match shape {self.shape}")
+
+
+def is_param(x: Any) -> bool:
+    return isinstance(x, Param)
+
+
+def _leaf_key(path) -> int:
+    s = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+    return int.from_bytes(hashlib.md5(s.encode()).digest()[:4], "little")
+
+
+def _init_leaf(p: Param, key: jax.Array, dtype) -> jax.Array:
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "embed":
+        std = p.scale or 1.0
+        return (jax.random.normal(key, p.shape) * std).astype(dtype)
+    # fan-in scaled normal over the last-but-one axis (in-features)
+    fan_in = p.shape[0] if len(p.shape) == 1 else p.shape[-2]
+    std = p.scale if p.scale is not None else (1.0 / max(1, fan_in)) ** 0.5
+    return (jax.random.normal(key, p.shape) * std).astype(dtype)
+
+
+def init_params(specs, key: jax.Array, dtype=jnp.float32):
+    """Initialize a spec tree into arrays with per-leaf derived keys."""
+
+    def f(path, p):
+        return _init_leaf(p, jax.random.fold_in(key, _leaf_key(path)), dtype)
+
+    return jax.tree_util.tree_map_with_path(f, specs, is_leaf=is_param)
+
+
+def param_shapes(specs, dtype=jnp.float32):
+    """Spec tree -> ShapeDtypeStruct tree (dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype), specs, is_leaf=is_param
+    )
+
+
+def tree_axes(specs):
+    """Spec tree -> logical-axes tree (same structure, tuples as leaves)."""
+    return jax.tree.map(lambda p: p.axes, specs, is_leaf=is_param)
+
+
+def count_params(specs) -> int:
+    import math
+
+    leaves = jax.tree.leaves(specs, is_leaf=is_param)
+    return sum(math.prod(p.shape) for p in leaves)

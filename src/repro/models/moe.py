@@ -1,0 +1,103 @@
+"""Token-choice top-k Mixture-of-Experts FFN (expert parallel).
+
+Group-wise einsum dispatch (Mesh-TF / Switch style, tuned for GSPMD):
+tokens are split into small contiguous groups of `MOE_GROUP` tokens; within
+each group, every routing slot places tokens into a per-expert capacity
+buffer via a one-hot dispatch tensor (group, token, expert, capacity).  All
+group-indexed tensors stay batch-sharded, so dispatch/combine are entirely
+LOCAL einsums — no scatter ops for GSPMD to mangle, no extra collectives.
+
+The dispatch einsum costs g_t * E * C_g * d MACs per group; with small
+groups (64 tokens) C_g = g_t*k/E*cf stays tiny and dispatch overhead is
+2-4% of expert FLOPs (napkin math in EXPERIMENTS.md §Perf).  Tokens beyond
+a group's per-expert capacity are dropped (counted); the usual Switch
+load-balancing aux loss is returned.
+
+Expert weights carry ("experts", "embed", "expert_mlp") logical axes ->
+expert-parallel over `model` when divisible (moonlight: 64e/16), with the
+partitioning fallback sharding d_ff instead when not (granite: 40e).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.module import Param
+from repro.sharding.partitioning import constrain
+
+__all__ = ["moe_specs", "apply_moe", "MOE_GROUP"]
+
+MOE_GROUP = 64  # tokens per dispatch group
+
+
+def moe_specs(cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.padded_experts
+    return {
+        "router": Param((d, e), ("embed", "experts"), scale=d**-0.5),
+        "w_gate": Param((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_up": Param((e, d, f), ("experts", "embed", "expert_mlp")),
+        "w_down": Param((e, f, d), ("experts", "expert_mlp", "embed")),
+    }
+
+
+def apply_moe(p, x, cfg):
+    """x: (B, S, d) -> (B, S, d), aux dict (load-balance loss, drop frac)."""
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.experts_per_token
+    ep = cfg.padded_experts  # dummy experts: masked in routing, sharded in EP
+    dt = x.dtype
+    t = b * s
+    gt = min(MOE_GROUP, t)  # tokens per group
+    assert t % gt == 0, (t, gt)
+    g = t // gt
+    cap = max(1, int(-(-gt * k * cfg.capacity_factor // e)))  # ceil
+
+    xg = x.reshape(g, gt, d)
+    xg = constrain(xg, ("batch", None, "embed"))
+
+    logits = xg.astype(jnp.float32) @ p["router"].astype(jnp.float32)  # (g,gt,ep)
+    if ep > e:  # padded experts never routed to
+        logits = jnp.where(jnp.arange(ep) < e, logits, -1e9)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, eidx = jax.lax.top_k(probs, k)  # (g,gt,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # Switch load-balancing aux loss over all tokens
+    density = jnp.mean(jax.nn.one_hot(eidx[..., 0], ep, dtype=jnp.float32),
+                       axis=(0, 1))
+    aux_loss = e * jnp.sum(density * probs.mean(axis=(0, 1)))
+
+    # build dispatch (bool-ish) and combine (gated) tensors slot by slot
+    disp = jnp.zeros((g, gt, ep, cap), dt)
+    comb = jnp.zeros((g, gt, ep, cap), jnp.float32)
+    # running per-(group, expert) fill count across slots
+    fill = jnp.zeros((g, ep), jnp.int32)
+    dropped = 0.0
+    for slot in range(k):  # static unroll (k <= 8)
+        oh_e = jax.nn.one_hot(eidx[..., slot], ep, dtype=jnp.int32)  # (g,gt,ep)
+        # position within expert buffer = prior fill + prefix count in slot
+        pos_in_slot = jnp.cumsum(oh_e, axis=1) - oh_e
+        pos = pos_in_slot + fill[:, None, :]
+        fill = fill + oh_e.sum(axis=1)
+        keep = (pos < cap) & (oh_e > 0)
+        dropped += 1.0 - (keep.sum() / jnp.maximum(oh_e.sum(), 1)).astype(jnp.float32)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        oh_c = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32) * keep[..., None]
+        disp = disp + (oh_c).astype(dt)  # (g,gt,e,cap)
+        comb = comb + oh_c * gates[..., slot][..., None, None]
+
+    # dispatch: (g,gt,e,cap) x (g,gt,d) -> (g,e,cap,d)   [local einsum]
+    buf = jnp.einsum("gtec,gtd->gecd", disp, xg)
+    buf = constrain(buf, ("batch", "experts", "capacity", "embed"))
+
+    gte = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"].astype(dt))
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"].astype(dt))
+    gte = constrain(gte, ("batch", "experts", "capacity", "expert_mlp"))
+    h = jax.nn.silu(gte) * up
+    y = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+    y = constrain(y, ("batch", "experts", "capacity", "embed"))
+
+    out = jnp.einsum("gtec,gecd->gtd", comb.astype(dt), y)
+    aux = {"moe_aux_loss": aux_loss, "moe_drop_frac": dropped / k}
+    return out.reshape(b, s, d), aux

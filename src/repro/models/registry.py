@@ -1,0 +1,25 @@
+"""Model registry: arch family -> ModelDef."""
+
+from __future__ import annotations
+
+from repro.models import encdec, rglru, rwkv6, transformer, vlm
+from repro.models.transformer import ModelDef
+
+__all__ = ["get_model_def"]
+
+_FAMILY = {
+    "dense": transformer.make_model_def,
+    "moe": transformer.make_model_def,
+    "ssm": rwkv6.make_model_def,
+    "hybrid": rglru.make_model_def,
+    "encdec": encdec.make_model_def,
+    "audio": encdec.make_model_def,
+    "vlm": vlm.make_model_def,
+}
+
+
+def get_model_def(cfg) -> ModelDef:
+    try:
+        return _FAMILY[cfg.family]()
+    except KeyError:
+        raise KeyError(f"no model family {cfg.family!r}; have {sorted(_FAMILY)}")

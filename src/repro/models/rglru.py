@@ -1,0 +1,277 @@
+"""RecurrentGemma / Griffin hybrid (arXiv:2402.19427): RG-LRU recurrent
+blocks and local (sliding-window, MQA) attention in a 2:1 pattern
+(rec, rec, attn).  Sub-quadratic by construction: the recurrent state is
+O(1) and the attention cache is bounded by the window — this arch runs
+long_500k natively.
+
+CAMformer applicability: the technique applies to the 1-in-3 local-attention
+layers (binary top-k over a window-bounded cache); RG-LRU layers are
+attention-free (DESIGN.md §Arch-applicability).
+
+Scan layout: 26 layers = 8 periods of (rec, rec, attn) under lax.scan + 2
+trailing rec layers unrolled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import attn_cache_spec, attn_specs, attention_block
+from repro.models.module import Param
+from repro.models.transformer import ModelDef, _last_logits, dtype_of, stack_specs
+from repro.sharding.partitioning import constrain
+
+__all__ = ["make_model_def"]
+
+RG_C = 8.0  # RG-LRU decay sharpness constant
+
+
+def _rec_specs(cfg):
+    d, r = cfg.d_model, cfg.rnn_width
+    w = cfg.conv_width
+    return {
+        "ln": L.norm_specs(cfg),
+        "w_gate": Param((d, r), ("embed", "rnn")),
+        "w_x": Param((d, r), ("embed", "rnn")),
+        "conv_w": Param((w, r), ("conv", "rnn")),
+        "conv_b": Param((r,), (None,), init="zeros"),
+        "w_rg": Param((r, r), ("rnn", "rnn"), scale=r**-0.5),
+        "b_rg": Param((r,), (None,), init="zeros"),
+        "w_ig": Param((r, r), ("rnn", "rnn"), scale=r**-0.5),
+        "b_ig": Param((r,), (None,), init="zeros"),
+        "lam": Param((r,), (None,), init="ones"),  # softplus(lam) decay rates
+        "w_out": Param((r, d), ("rnn", "embed")),
+        "ln_mlp": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _attn_layer_specs(cfg):
+    return {
+        "ln": L.norm_specs(cfg),
+        "attn": attn_specs(cfg),
+        "ln_mlp": L.norm_specs(cfg),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def _layout(cfg):
+    period = len(cfg.layer_pattern)  # ("rglru","rglru","attn")
+    n_periods = cfg.n_layers // period
+    tail = cfg.n_layers - n_periods * period  # trailing layers, pattern order
+    return period, n_periods, tail
+
+
+def specs(cfg):
+    _, n_periods, tail = _layout(cfg)
+    s = {
+        "embed": L.embed_specs(cfg),
+        "rec1": stack_specs(_rec_specs(cfg), n_periods),
+        "rec2": stack_specs(_rec_specs(cfg), n_periods),
+        "attn": stack_specs(_attn_layer_specs(cfg), n_periods),
+        "ln_f": L.norm_specs(cfg),
+    }
+    for i in range(tail):
+        s[f"tail_rec{i+1}"] = _rec_specs(cfg)
+    return s
+
+
+# ---------------- RG-LRU recurrent block ----------------
+
+def _causal_conv(x, conv_state, w, b):
+    """Depthwise causal conv over time. x: (B,S,r); conv_state: (B,W-1,r)."""
+    width = w.shape[0]
+    xx = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    out = sum(
+        xx[:, i : i + x.shape[1]] * w[i].astype(x.dtype) for i in range(width)
+    ) + b.astype(x.dtype)
+    new_state = xx[:, -(width - 1) :] if width > 1 else conv_state
+    return out, new_state
+
+
+def _apply_rec(p, x, cfg, cache):
+    """One Griffin recurrent block (+MLP). cache: {"conv": (B,W-1,r), "h": (B,r)}."""
+    dt = x.dtype
+    h_in = L.apply_norm(p["ln"], x, cfg)
+    gate = jax.nn.gelu(h_in @ p["w_gate"].astype(dt))
+    u = h_in @ p["w_x"].astype(dt)
+    u = constrain(u, ("batch", "seq", "rnn"))
+    u, conv_state = _causal_conv(u, cache["conv"], p["conv_w"], p["conv_b"])
+
+    r_g = jax.nn.sigmoid(u @ p["w_rg"].astype(dt) + p["b_rg"].astype(dt))
+    i_g = jax.nn.sigmoid(u @ p["w_ig"].astype(dt) + p["b_ig"].astype(dt))
+    log_a = -RG_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r_g.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i_g * u).astype(jnp.float32)
+    drive = jnp.sqrt(jnp.maximum(1.0 - a**2, 1e-12)) * gated
+
+    def step(h, inp):
+        a_t, d_t = inp
+        h = a_t * h + d_t
+        return h, h
+
+    a_s = a.swapaxes(0, 1)  # (S,B,r)
+    d_s = drive.swapaxes(0, 1)
+    h_last, ys = jax.lax.scan(step, cache["h"].astype(jnp.float32), (a_s, d_s))
+    y = ys.swapaxes(0, 1).astype(dt)
+
+    out = (gate * y) @ p["w_out"].astype(dt)
+    x = x + out
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+    x = constrain(x, ("batch", "seq", "embed"))
+    return x, {"conv": conv_state.astype(cache["conv"].dtype),
+               "h": h_last.astype(cache["h"].dtype)}
+
+
+def _apply_attn(p, x, cfg, cache, positions, cache_index, kv_len,
+                kv_positions=None):
+    h, new_cache = attention_block(
+        p["attn"], L.apply_norm(p["ln"], x, cfg), cfg,
+        positions=positions, cache=cache, cache_index=cache_index,
+        kv_len=kv_len, kv_positions=kv_positions, causal=True,
+        window=cfg.window)
+    x = x + h
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln_mlp"], x, cfg), cfg)
+    return constrain(x, ("batch", "seq", "embed")), new_cache
+
+
+# ---------------- caches ----------------
+
+def _rec_cache_spec(cfg, batch, n: int):
+    r, w = cfg.rnn_width, cfg.conv_width
+    return {
+        "conv": (jax.ShapeDtypeStruct((n, batch, w - 1, r), jnp.float32),
+                 ("layers", "batch", "conv", "rnn")),
+        "h": (jax.ShapeDtypeStruct((n, batch, r), jnp.float32),
+              ("layers", "batch", "rnn")),
+    }
+
+
+def cache_specs(cfg, batch: int, cache_len: int):
+    """Attention caches are window-bounded (ring buffer); rec state is O(1)."""
+    _, n_periods, tail = _layout(cfg)
+    wlen = min(cache_len, cfg.window or cache_len)
+    attn_one = attn_cache_spec(cfg, batch, wlen, dtype_of(cfg))
+    out = {
+        "rec1": _rec_cache_spec(cfg, batch, n_periods),
+        "rec2": _rec_cache_spec(cfg, batch, n_periods),
+        "attn": {
+            k: (jax.ShapeDtypeStruct((n_periods,) + sds.shape, sds.dtype),
+                ("layers",) + axes)
+            for k, (sds, axes) in attn_one.items()
+        },
+        "attn_pos": (jax.ShapeDtypeStruct((batch, wlen), jnp.int32),
+                     ("batch", "kv_seq")),
+    }
+    for i in range(tail):
+        out[f"tail_rec{i+1}"] = {
+            k: (jax.ShapeDtypeStruct(sds.shape[1:], sds.dtype), axes[1:])
+            for k, (sds, axes) in _rec_cache_spec(cfg, batch, 1).items()
+        }
+    return out
+
+
+def _zero_caches(cfg, batch, cache_len):
+    def mk(t):
+        sds = t[0]
+        z = jnp.zeros(sds.shape, sds.dtype)
+        return z
+    tree = jax.tree.map(mk, cache_specs(cfg, batch, cache_len),
+                        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+                        and isinstance(x[0], jax.ShapeDtypeStruct))
+    return tree
+
+
+# ---------------- forward ----------------
+
+def _forward(params, tokens, cfg, caches, *, positions, cache_index, kv_len,
+             kv_positions=None, train=False):
+    dt = dtype_of(cfg)
+    b, s = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, cfg, dt) * jnp.asarray(
+        cfg.d_model**0.5, dt)
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(carry, xs):
+        h = carry
+        if train:
+            p1, c1, p2, c2, pa = xs
+            ca = None
+        else:
+            p1, c1, p2, c2, pa, ca = xs
+        h, nc1 = _apply_rec(p1, h, cfg, c1)
+        h, nc2 = _apply_rec(p2, h, cfg, c2)
+        h, nca = _apply_attn(pa, h, cfg, ca, positions, cache_index, kv_len,
+                             kv_positions)
+        return h, (nc1, nc2, nca) if not train else (nc1, nc2)
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+
+    if train:
+        xs = (params["rec1"], caches["rec1"], params["rec2"], caches["rec2"],
+              params["attn"])
+        x, _ = jax.lax.scan(body, x, xs)
+        new_caches = caches
+    else:
+        xs = (params["rec1"], caches["rec1"], params["rec2"], caches["rec2"],
+              params["attn"], caches["attn"])
+        x, (nc1, nc2, nca) = jax.lax.scan(body, x, xs)
+        new_caches = dict(caches)
+        new_caches.update({"rec1": nc1, "rec2": nc2, "attn": nca})
+
+    _, _, tail = _layout(cfg)
+    for i in range(tail):
+        key = f"tail_rec{i+1}"
+        x, nc = _apply_rec(params[key], x, cfg, caches[key])
+        if not train:
+            new_caches[key] = nc
+    return L.apply_norm(params["ln_f"], x, cfg), new_caches
+
+
+def loss(params, batch, cfg):
+    b, s = batch["tokens"].shape
+    caches = _zero_caches(cfg, b, s)
+    x, _ = _forward(params, batch["tokens"], cfg, caches,
+                    positions=None, cache_index=None, kv_len=None, train=True)
+    return L.chunked_cross_entropy(x, params["embed"], batch["labels"], cfg,
+                                   loss_mask=batch.get("loss_mask"))
+
+
+def prefill(params, batch, caches, cfg):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x, caches = _forward(params, tokens, cfg, caches,
+                         positions=None, cache_index=jnp.int32(0), kv_len=None)
+    wlen = caches["attn"]["v"].shape[3]
+    caches = dict(caches)
+    if s >= wlen:  # ring holds the trailing window (written by _write_cache)
+        pos0 = jnp.arange(s - wlen, s, dtype=jnp.int32)
+    else:  # slots >= s are unwritten; kv_len masking excludes them
+        pos0 = jnp.arange(wlen, dtype=jnp.int32)
+    caches["attn_pos"] = jnp.broadcast_to(pos0[None], (b, wlen))
+    return _last_logits(params, x, cfg), caches
+
+
+def decode(params, tokens, pos, kv_len, caches, cfg):
+    b = tokens.shape[0]
+    positions = pos.reshape(b, 1).astype(jnp.int32)
+    wlen = caches["attn"]["v"].shape[3]
+    slots = jnp.mod(pos, wlen).astype(jnp.int32)  # per-slot ring position
+    caches = dict(caches)
+    caches["attn_pos"] = jax.vmap(
+        lambda row, val, s: jax.lax.dynamic_update_slice(row, val, (s,))
+    )(caches["attn_pos"], positions, slots)
+    x, caches = _forward(params, tokens.reshape(b, 1), cfg, caches,
+                         positions=positions, cache_index=slots,
+                         kv_len=kv_len.astype(jnp.int32),
+                         kv_positions=caches["attn_pos"])
+    return _last_logits(params, x, cfg), caches
+
+
+def make_model_def():
+    return ModelDef(specs=specs, loss=loss, prefill=prefill, decode=decode,
+                    cache_specs=cache_specs)

@@ -1,0 +1,207 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with data-dependent
+decay.  CAMformer's attention technique is INAPPLICABLE here (no QK^T, no KV
+cache) — recorded in DESIGN.md §Arch-applicability; the arch is built
+without it, which also makes it the native long_500k (sub-quadratic) arch.
+
+Per layer: time-mix (WKV with per-channel data-dependent decay w_t, bonus u)
+and channel-mix.  State per layer/head: S in R^{c x c}; decode carries
+(token_shift x_prev, S) — O(1) per token.
+
+Faithful-lite simplifications (documented): the 5 token-shift mixes use
+static learned mu (the v6 LoRA delta on the decay is kept, as it is the
+Finch contribution); head layout (H = d_model / 64) matches the release.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.module import Param
+from repro.models.transformer import ModelDef, dtype_of, stack_specs
+from repro.sharding.partitioning import constrain
+
+__all__ = ["make_model_def"]
+
+
+def _heads(cfg):
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def _tm_specs(cfg):
+    d = cfg.d_model
+    c = cfg.rwkv_head_dim
+    h = _heads(cfg)
+    lora = 64
+    return {
+        "mu": Param((5, d), (None, None)),  # shift mixes for r,k,v,w,g
+        "w0": Param((d,), (None,)),  # static decay bias
+        "w_lora_a": Param((d, lora), ("embed", None)),
+        "w_lora_b": Param((lora, d), (None, "embed")),
+        "u": Param((h, c), ("heads", None)),  # per-head bonus
+        "wr": Param((d, d), ("embed", "heads")),
+        "wk": Param((d, d), ("embed", "heads")),
+        "wv": Param((d, d), ("embed", "heads")),
+        "wg": Param((d, d), ("embed", "heads")),
+        "wo": Param((d, d), ("heads", "embed")),
+        "ln_x": Param((d,), (None,), init="ones"),  # group-norm scale
+    }
+
+
+def _cm_specs(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu": Param((2, d), (None, None)),
+        "wk": Param((d, f), ("embed", "mlp")),
+        "wv": Param((f, d), ("mlp", "embed")),
+        "wr": Param((d, d), ("embed", "embed")),
+    }
+
+
+def _block_specs(cfg):
+    return {
+        "ln1": L.norm_specs(cfg),
+        "tm": _tm_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+        "cm": _cm_specs(cfg),
+    }
+
+
+def specs(cfg):
+    return {
+        "embed": L.embed_specs(cfg),
+        "blocks": stack_specs(_block_specs(cfg), cfg.n_layers),
+        "ln_f": L.norm_specs(cfg),
+    }
+
+
+def _shift(x, x_prev):
+    """Token shift: returns x_{t-1} sequence given chunk + carry-in."""
+    return jnp.concatenate([x_prev[:, None].astype(x.dtype), x[:, :-1]], axis=1)
+
+
+def _time_mix(p, x, cfg, x_prev, state):
+    """x: (B,S,d); x_prev: (B,d) carry-in; state: (B,H,c,c).
+
+    Returns (out, new_x_prev, new_state)."""
+    b, s, d = x.shape
+    h, c = _heads(cfg), cfg.rwkv_head_dim
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+    mix = lambda i: x + (xs - x) * p["mu"][i].astype(dt)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, c)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, c)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, c)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    # data-dependent decay (the Finch contribution): w = exp(-exp(..))
+    dw = (xw @ p["w_lora_a"].astype(dt)) @ p["w_lora_b"].astype(dt)
+    w = jnp.exp(-jnp.exp((p["w0"].astype(jnp.float32) + dw.astype(jnp.float32))))
+    w = w.reshape(b, s, h, c)
+    u = p["u"].astype(jnp.float32)
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # (B,H,c) each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # (B,H,c,c)
+        y = jnp.einsum("bhi,bhij->bhj", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    rs, ks, vs, ws = (t.swapaxes(0, 1).astype(jnp.float32)
+                      for t in (r, k, v, w))  # (S,B,H,c)
+    state, ys = jax.lax.scan(step, state.astype(jnp.float32), (rs, ks, vs, ws))
+    y = ys.swapaxes(0, 1).reshape(b, s, d)  # (B,S,d)
+    # per-head group norm
+    yh = y.reshape(b, s, h, c)
+    yh = yh * jax.lax.rsqrt(jnp.mean(yh**2, axis=-1, keepdims=True) + 1e-6)
+    y = (yh.reshape(b, s, d) * p["ln_x"].astype(jnp.float32)).astype(dt)
+    out = (y * g) @ p["wo"].astype(dt)
+    return out, x[:, -1], state
+
+
+def _channel_mix(p, x, cfg, x_prev):
+    dt = x.dtype
+    xs = _shift(x, x_prev)
+    xk = x + (xs - x) * p["mu"][0].astype(dt)
+    xr = x + (xs - x) * p["mu"][1].astype(dt)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt)))
+    k = constrain(k, ("batch", "seq", "mlp"))
+    r = jax.nn.sigmoid(xr @ p["wr"].astype(dt))
+    return r * (k @ p["wv"].astype(dt)), x[:, -1]
+
+
+def _apply_block(p, x, cfg, cache):
+    h, tm_prev, st = _time_mix(p["tm"], L.apply_norm(p["ln1"], x, cfg), cfg,
+                               cache["tm_prev"], cache["wkv"])
+    x = x + h
+    h, cm_prev = _channel_mix(p["cm"], L.apply_norm(p["ln2"], x, cfg), cfg,
+                              cache["cm_prev"])
+    x = constrain(x + h, ("batch", "seq", "embed"))
+    return x, {"tm_prev": tm_prev, "cm_prev": cm_prev,
+               "wkv": st.astype(cache["wkv"].dtype)}
+
+
+def cache_specs(cfg, batch: int, cache_len: int):
+    """RWKV state is O(1) in sequence length (cache_len unused)."""
+    del cache_len
+    h, c, d = _heads(cfg), cfg.rwkv_head_dim, cfg.d_model
+    lyr = cfg.n_layers
+    return {
+        "tm_prev": (jax.ShapeDtypeStruct((lyr, batch, d), jnp.float32),
+                    ("layers", "batch", "embed")),
+        "cm_prev": (jax.ShapeDtypeStruct((lyr, batch, d), jnp.float32),
+                    ("layers", "batch", "embed")),
+        "wkv": (jax.ShapeDtypeStruct((lyr, batch, h, c, c), jnp.float32),
+                ("layers", "batch", "heads", None, None)),
+    }
+
+
+def _zero_cache(cfg, b):
+    return jax.tree.map(lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+                        cache_specs(cfg, b, 0),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def _forward(params, tokens, cfg, caches):
+    dt = dtype_of(cfg)
+    x = L.embed_lookup(params["embed"], tokens, cfg, dt)
+
+    def body(h, xs):
+        layer_p, layer_c = xs
+        h, new_c = _apply_block(layer_p, h, cfg, layer_c)
+        return h, new_c
+
+    if cfg.remat == "full":
+        body = jax.checkpoint(body, prevent_cse=False)
+    x, new_caches = jax.lax.scan(body, x, (params["blocks"], caches))
+    return L.apply_norm(params["ln_f"], x, cfg), new_caches
+
+
+def loss(params, batch, cfg):
+    b = batch["tokens"].shape[0]
+    x, _ = _forward(params, batch["tokens"], cfg, _zero_cache(cfg, b))
+    return L.chunked_cross_entropy(x, params["embed"], batch["labels"], cfg,
+                                   loss_mask=batch.get("loss_mask"))
+
+
+def prefill(params, batch, caches, cfg):
+    x, caches = _forward(params, batch["tokens"], cfg, caches)
+    from repro.models.transformer import _last_logits
+
+    return _last_logits(params, x, cfg), caches
+
+
+def decode(params, tokens, pos, kv_len, caches, cfg):
+    del pos, kv_len  # positions are implicit in the recurrent state
+    b = tokens.shape[0]
+    x, caches = _forward(params, tokens.reshape(b, 1), cfg, caches)
+    from repro.models.transformer import _last_logits
+
+    return _last_logits(params, x, cfg), caches
+
+
+def make_model_def():
+    return ModelDef(specs=specs, loss=loss, prefill=prefill, decode=decode,
+                    cache_specs=cache_specs)

@@ -1,0 +1,46 @@
+"""LLaVA-Next-style VLM: Mistral-7B language backbone + vision stub.
+
+Per the assignment the vision tower / anyres tiling is a STUB:
+`input_specs()` supplies precomputed patch embeddings (B, n_patches,
+d_model) which are prepended to the text sequence.  The backbone (and
+CAMformer attention over the mixed sequence) is the real system under test.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import transformer as T
+
+__all__ = ["make_model_def"]
+
+
+def loss(params, batch, cfg):
+    """batch: image_embeds (B, P, d), tokens (B, S_text), labels (B, S_text)."""
+    img = batch["image_embeds"]
+    p = img.shape[1]
+    x, _, aux = T.lm_hidden(params, batch["tokens"], cfg, prefix_embeds=img)
+    # hidden at absolute position P-1+i predicts text token i -> text-aligned
+    # slice starts at the last image slot
+    x_text = x[:, p - 1 : -1] if x.shape[1] > p else x
+    loss_val, stats = L.chunked_cross_entropy(
+        x_text, params["embed"], batch["labels"][:, : x_text.shape[1]], cfg,
+        loss_mask=batch.get("loss_mask"))
+    stats.update(aux)
+    return loss_val, stats
+
+
+def prefill(params, batch, caches, cfg):
+    return T.lm_prefill(params, batch, caches, cfg)
+
+
+def make_model_def():
+    return T.ModelDef(
+        specs=T.lm_specs,
+        loss=loss,
+        prefill=prefill,
+        decode=T.lm_decode,
+        cache_specs=T.lm_cache_specs,
+    )

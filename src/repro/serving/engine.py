@@ -1,0 +1,132 @@
+"""Batched serving engine with continuous batching.
+
+Slot-based scheduling over a fixed decode batch: finished sequences free
+their slot, queued prompts are prefilled (batch-of-one) and spliced into
+the shared KV cache at the free slot, and every engine step decodes all
+active slots at their own positions (ragged positions / kv lengths are
+native to the attention masking).  With `attn_mode="camformer"` the cache
+stores bit-packed keys and each step performs the paper's CAM search +
+two-stage top-k against the growing cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import cast_params
+from repro.models.transformer import dtype_of
+from repro.serving import sampler as S
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    rid: int = 0
+    tokens: Optional[List[int]] = None  # generated
+
+
+class ServeEngine:
+    def __init__(self, md, cfg, params, *, max_batch: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.md, self.cfg = md, cfg
+        self.params = cast_params(params, dtype_of(cfg))
+        self.max_batch, self.max_len = max_batch, max_len
+        self.rng = jax.random.PRNGKey(seed)
+
+        caches = md.cache_specs(cfg, max_batch, max_len)
+        is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
+                             and isinstance(x[0], jax.ShapeDtypeStruct))
+        self.caches = jax.tree.map(
+            lambda t: jnp.zeros(t[0].shape, t[0].dtype), caches, is_leaf=is_leaf)
+
+        self.pos = np.zeros(max_batch, np.int32)  # next position per slot
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.queue: List[Request] = []
+        self.done: List[Request] = []
+        self._decode = jax.jit(
+            lambda p, t, pos, kvl, c: md.decode(p, t, pos, kvl, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b, c: md.prefill(p, b, c, cfg))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        req.tokens = []
+        self.queue.append(req)
+
+    def _splice_cache(self, slot: int, one_cache):
+        """Insert a batch-of-one prefill cache into the shared cache."""
+        def ins(big, small):
+            if big.ndim < 2:
+                return big
+            # batch axis: layer-stacked leaves -> axis 1; flat leaves -> 0
+            ax = 1 if big.shape[0] == small.shape[0] and big.ndim == small.ndim and big.shape[1] == self.max_batch else 0
+            idx = [slice(None)] * big.ndim
+            idx[ax] = slice(slot, slot + 1)
+            return big.at[tuple(idx)].set(small)
+        self.caches = jax.tree.map(ins, self.caches, one_cache)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
+            one_caches = jax.tree.map(
+                lambda t: jnp.zeros(
+                    (t.shape[0], 1) + t.shape[2:], t.dtype)
+                if t.ndim >= 2 and t.shape[1] == self.max_batch
+                else jnp.zeros((1,) + t.shape[1:], t.dtype),
+                self.caches)
+            batch = {"tokens": prompt}
+            logits, one_caches = self._prefill(self.params, batch, one_caches)
+            self._splice_cache(slot, one_caches)
+            first = int(S.greedy(logits)[0]) if req.temperature == 0.0 else int(
+                S.sample(logits, self._next_rng(), temperature=req.temperature)[0])
+            req.tokens.append(first)
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+
+    def _next_rng(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: admit new requests, decode all active slots."""
+        self._admit()
+        if not any(r is not None for r in self.active):
+            return False
+        tokens = np.zeros(self.max_batch, np.int32)
+        for i, r in enumerate(self.active):
+            if r is not None:
+                tokens[i] = r.tokens[-1]
+        pos = jnp.asarray(self.pos)
+        kv_len = jnp.asarray(self.pos + 1)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tokens), pos, kv_len, self.caches)
+        nxt = S.greedy(logits)
+        nxt_host = np.asarray(nxt)
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            r.tokens.append(int(nxt_host[i]))
+            self.pos[i] += 1
+            if (len(r.tokens) >= r.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                self.done.append(r)
+                self.active[i] = None
+        return True
+
+    def run(self):
+        while self.queue or any(r is not None for r in self.active):
+            self.step()
+        return self.done

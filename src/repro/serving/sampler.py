@@ -1,0 +1,24 @@
+"""Token samplers for the serving engine."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["greedy", "sample"]
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 1.0,
+           top_k: int = 0) -> jax.Array:
+    """Temperature + optional top-k sampling. logits: (B, V)."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    l = logits / temperature
+    if top_k:
+        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
+        l = jnp.where(l < kth, -1e9, l)
+    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)

@@ -1,0 +1,1 @@
+"""Distribution: logical-axis partitioning, compression, pipeline."""

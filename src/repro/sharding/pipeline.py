@@ -1,0 +1,84 @@
+"""GPipe-style pipeline parallelism (shard_map + collective_permute).
+
+The production dry-run mesh is DP x TP per the assignment, but the
+framework supports PP for deeper meshes: layers are split into S stages
+along a `pipe` mesh axis; microbatches flow through the stage ring with
+`ppermute` handoffs.  A schedule of (n_micro + n_stages - 1) ticks fills
+and drains the pipeline; bubble fraction = (S-1)/(M+S-1).
+
+The implementation is deliberately self-contained: `pipeline_forward`
+takes a per-stage apply function and stage-stacked params, and is
+validated against the sequential oracle in tests/test_pipeline.py on a
+4-way host mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["pipeline_forward"]
+
+
+def pipeline_forward(stage_fn, stage_params, x_micro, mesh, axis: str = "pipe"):
+    """Run microbatches through a stage ring.
+
+    Args:
+      stage_fn: (params_for_stage, h) -> h   (same shape in/out).
+      stage_params: pytree with a leading stage axis == mesh.shape[axis].
+      x_micro: (n_micro, mb, ...) microbatched input.
+      mesh: mesh containing `axis`.
+
+    Returns: (n_micro, mb, ...) outputs after all stages.
+    """
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    ticks = n_micro + n_stages - 1
+
+    def body(params_local, x_local):
+        # params_local: this stage's params (leading axis stripped by
+        # shard_map); x_local: full microbatch stream (replicated).
+        params_local = jax.tree.map(lambda a: a[0], params_local)
+        stage = jax.lax.axis_index(axis)
+        # mark carries as axis-varying up front (their values diverge per
+        # stage inside the loop) so the fori carry types stay consistent
+        h = jax.lax.pcast(jnp.zeros_like(x_local[0]), (axis,), to="varying")
+        outs = jax.lax.pcast(jnp.zeros_like(x_local), (axis,), to="varying")
+
+        def tick(t, carry):
+            h, outs = carry
+            # stage 0 ingests microbatch t (when available)
+            mb_idx = jnp.clip(t, 0, n_micro - 1)
+            fresh = jax.lax.dynamic_index_in_dim(x_local, mb_idx, 0,
+                                                 keepdims=False)
+            h_in = jnp.where(stage == 0, fresh, h)
+            h_out = stage_fn(params_local, h_in)
+            # last stage emits microbatch (t - n_stages + 1); jnp.where
+            # instead of lax.cond keeps the shard_map varying-axis types
+            # consistent across branches
+            out_idx = jnp.clip(t - n_stages + 1, 0, n_micro - 1)
+            emit = jnp.logical_and(stage == n_stages - 1,
+                                   t >= n_stages - 1)
+            upd = jax.lax.dynamic_update_index_in_dim(outs, h_out, out_idx, 0)
+            outs = jnp.where(emit, upd, outs)
+            # rotate activations one stage forward
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            h_next = jax.lax.ppermute(h_out, axis, perm)
+            return h_next, outs
+
+        h, outs = jax.lax.fori_loop(0, ticks, tick, (h, outs))
+        # only the last stage holds real outputs; broadcast them ring-wide
+        outs = jax.lax.psum(
+            jnp.where(stage == n_stages - 1, outs, jnp.zeros_like(outs)),
+            axis)
+        return outs
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+    )
+    return fn(stage_params, x_micro)

@@ -1,0 +1,143 @@
+"""Checkpointing: async, atomic, keep-N, mesh-agnostic (elastic restore).
+
+Layout:  <dir>/step_<k>/   one .npy per flattened leaf + manifest.json.
+Writes go to  <dir>/tmp_<k>  and are atomically renamed, so a crash mid-save
+never corrupts the latest checkpoint; `latest_step` only sees complete
+checkpoints.  Leaves are stored as FULL host arrays (gathered), so a
+checkpoint written on one mesh restores onto ANY mesh/sharding — this is
+what makes elastic rescaling (launch/elastic.py) and trainer fail-over
+work.  Saving runs on a background thread (async checkpointing overlaps
+the next training steps); `wait()` joins before the next save or exit.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "AsyncCheckpointer"]
+
+_SEP = "::"
+
+
+def _flat(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    items = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        items[key] = leaf
+    return items, treedef
+
+
+def save_checkpoint(ckpt_dir: str, state, step: int, keep: int = 3):
+    """Synchronous atomic save of a (possibly sharded) pytree."""
+    items, _ = _flat(state)
+    tmp = os.path.join(ckpt_dir, f"tmp_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for key, leaf in items.items():
+        arr = np.asarray(jax.device_get(leaf))  # gathers sharded arrays
+        fname = key.replace("/", "_") + ".npy"
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append({"key": key, "file": fname,
+                                   "shape": list(arr.shape),
+                                   "dtype": str(arr.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _prune(ckpt_dir, keep)
+    return final
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(_steps(ckpt_dir))
+    for s in steps[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"), ignore_errors=True)
+
+
+def _steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                continue
+    return out
+
+
+def latest_step(ckpt_dir: str):
+    steps = _steps(ckpt_dir)
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, state_template, step: int | None = None,
+                       shardings=None):
+    """Restore onto the CURRENT mesh (shardings tree optional; defaults to
+    the template leaves' shardings if they are concrete arrays, else
+    unsharded host arrays)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+
+    items, treedef = _flat(state_template)
+    sh_items = _flat(shardings)[0] if shardings is not None else {}
+    leaves = []
+    for key, tmpl in items.items():
+        m = by_key[key]
+        arr = np.load(os.path.join(d, m["file"]))
+        sh = sh_items.get(key)
+        if sh is not None:
+            leaves.append(jax.device_put(arr, sh))
+        else:
+            leaves.append(jax.device_put(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    return tree, step
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpointing (overlaps training compute)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir, self.keep = ckpt_dir, keep
+        self._thread = None
+        self.last_error = None
+
+    def save(self, state, step: int):
+        self.wait()
+        # device_get on the main thread (device consistency), IO on worker
+        host_state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+
+        def work():
+            try:
+                save_checkpoint(self.ckpt_dir, host_state, step, self.keep)
+            except Exception as e:  # noqa: BLE001 — surfaced via last_error
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err

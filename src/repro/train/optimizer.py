@@ -1,0 +1,84 @@
+"""AdamW optimizer + schedules (no optax dependency — substrate built here).
+
+Functional API mirroring optax minimally:
+    opt = adamw(schedule, ...)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+Optimizer state trees share the parameter PartitionSpecs (m/v shard like
+their parameters), which launch/steps.py exploits for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw", "cosine_schedule", "constant_schedule", "global_norm",
+           "clip_by_global_norm", "Optimizer"]
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (new_params, new_state, stats)
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(1, warmup)
+        t = jnp.clip((step - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return fn
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), tree), norm
+
+
+def adamw(
+    schedule: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return {"m": zeros(), "v": zeros(), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr = schedule(step)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            u = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {
+            "grad_norm": gnorm, "lr": lr}
+
+    return Optimizer(init=init, update=update)

@@ -1,0 +1,51 @@
+"""HLO analyzer: loop-aware FLOP/collective accounting (the roofline's
+foundation — cost_analysis() counts while bodies once; we must not)."""
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.hlo import analyze_hlo
+
+
+def test_scan_flops_multiplied_by_trip_count():
+    def f(x, w):
+        def body(c, _):
+            return c @ w, None
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return jnp.sum(y)
+
+    sds = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    comp = jax.jit(f).lower(sds, sds).compile()
+    r = analyze_hlo(comp.as_text())
+    assert abs(r["flops"] - 10 * 2 * 128**3) / (10 * 2 * 128**3) < 0.01
+    assert any(abs(v - 10.0) < 0.5 for v in r["loop_multipliers"].values())
+
+
+def test_nested_scan_multipliers_compose():
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return jnp.sum(y)
+
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    comp = jax.jit(f).lower(sds, sds).compile()
+    r = analyze_hlo(comp.as_text())
+    want = 12 * 2 * 64**3  # 4 x 3 iterations
+    assert abs(r["flops"] - want) / want < 0.01
+
+
+def test_no_loop_program_counts_once():
+    def f(a, b):
+        return (a @ b).sum()
+
+    sds = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    sds2 = jax.ShapeDtypeStruct((32, 16), jnp.float32)
+    comp = jax.jit(f).lower(sds, sds2).compile()
+    r = analyze_hlo(comp.as_text())
+    want = 2 * 64 * 32 * 16
+    assert abs(r["flops"] - want) / want < 0.01
+    assert r["collective_bytes"] == 0

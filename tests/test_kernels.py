@@ -1,0 +1,90 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import pack_bits, sign_pm1
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("b,r,skv,d", [
+    (1, 8, 16, 64), (2, 37, 100, 64), (1, 129, 257, 128),
+    (3, 8, 40, 256), (1, 300, 64, 96),
+])
+def test_bacam_mvm_matches_oracle(b, r, skv, d):
+    qb = sign_pm1(jax.random.normal(KEY, (b, r, d)))
+    kb = sign_pm1(jax.random.normal(jax.random.PRNGKey(1), (b, skv, d)))
+    got = ops.bacam_scores(qb, kb)
+    want = ref.bacam_scores_ref(pack_bits(qb), pack_bits(kb), d)
+    assert (got == want).all()
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8), (False, None)])
+@pytest.mark.parametrize("group,s1", [(16, 2), (8, 1), (4, 4)])
+def test_bacam_topk_stage1_matches_oracle(causal, window, group, s1):
+    b, r, skv, d = 2, 24, 96, 64
+    qb = sign_pm1(jax.random.normal(KEY, (b, r, d)))
+    kb = sign_pm1(jax.random.normal(jax.random.PRNGKey(2), (b, skv, d)))
+    qpos = jnp.tile(jnp.arange(r, dtype=jnp.int32)[None] * 4, (b, 1))
+    kvlen = jnp.array([skv, skv - 30], jnp.int32)
+    gv, gi = ops.bacam_attention_scores_topk(
+        qb, kb, qpos, kvlen, group=group, stage1_k=s1, causal=causal,
+        window=window)
+    rv, ri = ref.bacam_topk_stage1_ref(
+        pack_bits(qb), pack_bits(kb), d, qpos, group_size=group, stage1_k=s1,
+        causal=causal, window=window, kv_len=kvlen)
+    rvf = jnp.where(rv <= ref.MASKED_SCORE // 2, -1e9, rv.astype(jnp.float32))
+    assert (gv == rvf).all()
+    # indices must agree wherever valid (ties can permute equal VALUES, so
+    # compare the scores addressed by the indices instead of raw indices)
+    s_full = ref.bacam_scores_ref(pack_bits(qb), pack_bits(kb), d)
+    s_full = ref.masked_scores_ref(s_full, qpos, causal=causal, window=window,
+                                   kv_len=kvlen)
+    valid = gv > -1e8
+    picked = jnp.take_along_axis(s_full, gi, axis=-1)
+    assert (jnp.where(valid, picked, 0) == jnp.where(valid, gv.astype(jnp.int32), 0)).all()
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("b,sq,skv,d,causal,off,win", [
+    (2, 64, 64, 64, True, 0, None),
+    (1, 128, 128, 32, True, 0, 48),
+    (2, 16, 128, 64, True, 112, None),
+    (1, 64, 128, 64, False, 0, None),
+])
+def test_flash_attention_matches_oracle(dtype, b, sq, skv, d, causal, off, win):
+    q = jax.random.normal(KEY, (b, sq, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.PRNGKey(1), (b, skv, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.PRNGKey(2), (b, skv, d), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, off, causal=causal, window=win,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, q_offset=off,
+                                   window=win)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    assert jnp.abs(got.astype(jnp.float32) - want.astype(jnp.float32)).max() < tol
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("b,r,n,d", [(1, 8, 16, 64), (2, 17, 33, 64), (1, 64, 40, 128)])
+def test_bitslice_vmm_exact(bits, b, r, n, d):
+    x = sign_pm1(jax.random.normal(KEY, (b, r, d)))
+    w = jax.random.randint(jax.random.PRNGKey(3), (b, n, d),
+                           -(2 ** (bits - 1)), 2 ** (bits - 1), jnp.int32)
+    got = ops.bitslice_vmm(x, w, bits=bits)
+    want = ref.bitslice_vmm_ref(x, w, bits)
+    assert (got == want).all()
+
+
+def test_kernel_attention_equals_jnp_attention():
+    from repro.core import AttentionSpec, attention
+
+    q = jax.random.normal(KEY, (2, 8, 16, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 4, 16, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 4, 16, 64))
+    for mode in ("binary", "camformer"):
+        o1 = attention(q, k, v, AttentionSpec(mode=mode, k_top=8, use_kernel=False))
+        o2 = attention(q, k, v, AttentionSpec(mode=mode, k_top=8, use_kernel=True))
+        assert jnp.abs(o1 - o2).max() < 1e-5, mode

@@ -1,0 +1,96 @@
+"""Per-arch smoke tests: REDUCED same-family configs, one forward/train
+step + prefill/decode on CPU, asserting output shapes + no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, smoke_config
+from repro.models import get_model_def
+from repro.models.module import count_params, init_params
+
+KEY = jax.random.PRNGKey(0)
+B, S, CACHE = 2, 32, 48
+
+_IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
+                      and isinstance(x[0], jax.ShapeDtypeStruct))
+
+
+def make_batch(cfg, b, s, with_labels=True):
+    tokens = jax.random.randint(KEY, (b, s), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": tokens}
+    if with_labels:
+        batch["labels"] = jnp.roll(tokens, -1, axis=1)
+    if cfg.family == "audio":
+        batch["audio_features"] = jax.random.normal(
+            KEY, (b, cfg.enc_len, cfg.d_model), jnp.float32)
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            KEY, (b, cfg.n_patches, cfg.d_model), jnp.float32)
+    return batch
+
+
+def zero_caches(md, cfg, b, clen):
+    return jax.tree.map(lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+                        md.cache_specs(cfg, b, clen), is_leaf=_IS_LEAF)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_train_step_smoke(arch):
+    cfg = smoke_config(arch)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), KEY)
+    assert count_params(md.specs(cfg)) > 0
+    loss, aux = md.loss(params, make_batch(cfg, B, S), cfg)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss))
+    # one gradient step moves the loss
+    g = jax.grad(lambda p: md.loss(p, make_batch(cfg, B, S), cfg)[0])(params)
+    p2 = jax.tree.map(lambda p, g_: p - 0.5 * g_, params, g)
+    loss2, _ = md.loss(p2, make_batch(cfg, B, S), cfg)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) < float(loss)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+@pytest.mark.parametrize("mode", ["dense", "camformer"])
+def test_prefill_decode_smoke(arch, mode):
+    cfg = smoke_config(arch)
+    if mode == "camformer":
+        if cfg.family == "ssm":
+            pytest.skip("attention-free (DESIGN.md §Arch-applicability)")
+        cfg = cfg.replace(attn_mode="camformer")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), KEY)
+    caches = zero_caches(md, cfg, B, CACHE)
+    logits, caches = md.prefill(params, make_batch(cfg, B, S, False), caches, cfg)
+    assert logits.shape[0] == B and logits.shape[1] >= cfg.vocab
+    assert bool(jnp.isfinite(logits).all())
+    base = S + (cfg.n_patches if cfg.family == "vlm" else 0)
+    tok = jnp.argmax(logits[:, : cfg.vocab], -1).astype(jnp.int32)
+    pos = jnp.full((B,), base, jnp.int32)
+    for _ in range(3):
+        logits, caches = md.decode(params, tok, pos, pos + 1, caches, cfg)
+        assert bool(jnp.isfinite(logits).all())
+        tok = jnp.argmax(logits[:, : cfg.vocab], -1).astype(jnp.int32)
+        pos = pos + 1
+
+
+def test_decode_consistent_with_prefill():
+    """Greedy decode continuation must match teacher-forced prefill logits."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), KEY)
+    toks = jax.random.randint(KEY, (1, 12), 0, cfg.vocab, jnp.int32)
+
+    # full prefill over 12 tokens
+    c1 = zero_caches(md, cfg, 1, CACHE)
+    logits_full, _ = md.prefill(params, {"tokens": toks}, c1, cfg)
+
+    # prefill over 11 then decode token 12
+    c2 = zero_caches(md, cfg, 1, CACHE)
+    _, c2 = md.prefill(params, {"tokens": toks[:, :11]}, c2, cfg)
+    logits_step, _ = md.decode(params, toks[:, 11], jnp.array([11]),
+                               jnp.array([12]), c2, cfg)
+    assert jnp.abs(logits_full - logits_step).max() < 2e-2

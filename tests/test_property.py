@@ -1,0 +1,116 @@
+"""Property-based tests (hypothesis) on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (binary_scores_exact, pack_bits, sign_pm1,
+                        single_stage_topk, topk_recall, two_stage_topk,
+                        unpack_bits)
+from repro.core.bacam import adc_readout, hamming_scores_packed
+from repro.sharding.compression import compressed_mean_ref
+from repro.sharding.partitioning import ACT_RULES, PARAM_RULES, resolve_spec
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@given(st.integers(1, 4), st.integers(1, 6), st.sampled_from([32, 64, 96, 128]),
+       st.integers(0, 2**31 - 1))
+@SETTINGS
+def test_pack_is_bijective_and_scores_bounded(b, r, d, seed):
+    x = sign_pm1(jax.random.normal(jax.random.PRNGKey(seed), (b, r, d)))
+    y = sign_pm1(jax.random.normal(jax.random.PRNGKey(seed + 1), (b, r, d)))
+    assert (unpack_bits(pack_bits(x), d) == x).all()
+    s = hamming_scores_packed(pack_bits(x), pack_bits(y), d)
+    assert (s == binary_scores_exact(x, y)).all()
+    assert int(jnp.abs(s).max()) <= d
+    # parity invariant: s == d (mod 2)
+    assert (((s - d) % 2) == 0).all()
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 64), st.sampled_from([4, 8, 16]),
+       st.integers(1, 3))
+@SETTINGS
+def test_two_stage_topk_invariants(seed, n_groups, group, s1):
+    n = n_groups * group
+    k = min(32, n)
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (2, n))
+    tv, ti = two_stage_topk(scores, k=k, group_size=group, stage1_k=s1)
+    # 1) returned values are the scores at returned indices
+    picked = jnp.take_along_axis(scores, ti, axis=-1)
+    valid = tv > -1e8
+    assert jnp.allclose(jnp.where(valid, picked, 0), jnp.where(valid, tv, 0))
+    # 2) values sorted descending
+    assert (jnp.diff(tv, axis=-1) <= 1e-6).all()
+    # 3) no duplicate indices among valid entries
+    for row_i, row_v in zip(np.asarray(ti), np.asarray(valid)):
+        sel = row_i[row_v]
+        assert len(set(sel.tolist())) == len(sel)
+    # 4) superset property: with s1 >= k per group it IS exact top-k
+    if s1 * n_groups >= k and s1 >= min(group, k):
+        sv, si = single_stage_topk(scores, k)
+        assert float(topk_recall(ti, si).mean()) == 1.0
+
+
+@given(st.integers(0, 2**31 - 1))
+@SETTINGS
+def test_two_stage_recall_lower_bounded_by_construction(seed):
+    # recall >= k_found/k where each group contributes at most s1
+    scores = jax.random.normal(jax.random.PRNGKey(seed), (4, 256))
+    tv, ti = two_stage_topk(scores, k=16, group_size=16, stage1_k=2)
+    sv, si = single_stage_topk(scores, 16)
+    rec = float(topk_recall(ti, si).mean())
+    assert rec >= 0.5  # gaussian scores: far above worst case
+    # and the selected set's score mass is >= 90% of the true top-k mass
+    mass = tv.sum(-1) / sv.sum(-1)
+    assert float(mass.min()) > 0.8
+
+
+@given(st.integers(1, 64), st.sampled_from([6, 7, 8]))
+@SETTINGS
+def test_adc_monotone(count, bits):
+    # ADC readout is monotone in the match count and within 1 count for >=6b
+    a = adc_readout(jnp.arange(0, 65, dtype=jnp.float32), cam_w=64, bits=bits)
+    assert (jnp.diff(a) >= 0).all()
+    assert jnp.abs(a - jnp.arange(0, 65)).max() <= (1.0 if bits == 6 else 0.0)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 8))
+@SETTINGS
+def test_compression_error_feedback_unbiased_over_time(seed, n):
+    # repeated compression of a CONSTANT gradient converges to the true
+    # mean: error feedback re-injects what quantization dropped
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(n, 33)).astype(np.float32))
+    errs = jnp.zeros_like(g)
+    true_mean = g.mean(0)
+    acc = jnp.zeros(33)
+    steps = 50
+    for _ in range(steps):
+        est, errs = compressed_mean_ref(g, errs)
+        acc = acc + est
+    # telescoping bound: |acc/T - true| <= max_scale/(2T) per pod summed
+    drift = jnp.abs(acc / steps - true_mean).max()
+    assert float(drift) < 0.02
+
+
+@given(st.sampled_from([
+    # (logical axes, shape) -> must resolve without error, never over-shard
+    (("batch", "kv_heads", "kv_seq", "head_dim"), (128, 8, 32768, 128)),
+    (("batch", "kv_heads", "kv_seq", "head_dim"), (1, 8, 524288, 128)),
+    (("batch", "kv_heads", "kv_seq", "head_dim"), (1, 1, 2048, 256)),
+    (("experts", "embed", "expert_mlp"), (48, 1536, 512)),
+    (("vocab", "embed"), (152064, 8192)),
+]))
+@SETTINGS
+def test_resolve_spec_divisibility(case):
+    import jax as _jax
+    from repro.sharding.partitioning import CACHE_RULES
+
+    axes, shape = case
+    mesh = _jax.make_mesh((1, 1), ("data", "model"),
+                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    # trivially valid on a 1x1 mesh
+    spec = resolve_spec(axes, shape, mesh, CACHE_RULES)
+    assert len(spec) == len(shape)
