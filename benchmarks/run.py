@@ -2,19 +2,32 @@
 
 Prints ``name,us_per_call,derived`` CSV at the end (scaffold contract);
 human-readable tables above it.
+
+``--smoke`` runs the CI-sized subset: analytic energy numbers, the
+roofline report (no-op without dry-run artifacts), and the paged-decode
+engine tick — no training loops or large host-timed attention sweeps.
 """
 
-import sys
+import argparse
 
 
 def main() -> None:
-    csv_rows = []
-    from benchmarks import fig5_energy, roofline, table2_perf, table34_accuracy
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI subset (no training / large sweeps)")
+    args = ap.parse_args()
 
-    csv_rows = table2_perf.run(csv_rows)
+    csv_rows = []
+    from benchmarks import fig5_energy, paged_decode, roofline
+
     csv_rows = fig5_energy.run(csv_rows)
-    csv_rows = table34_accuracy.run(csv_rows)
+    csv_rows = paged_decode.run(csv_rows)
     csv_rows = roofline.run(csv_rows)
+    if not args.smoke:
+        from benchmarks import table2_perf, table34_accuracy
+
+        csv_rows = table2_perf.run(csv_rows)
+        csv_rows = table34_accuracy.run(csv_rows)
 
     print("\nname,us_per_call,derived")
     for name, val, derived in csv_rows:

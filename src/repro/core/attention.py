@@ -34,7 +34,25 @@ from repro.core import bacam
 from repro.core.binarize import binarize_qk
 from repro.core.topk import NEG_INF, two_stage_topk, single_stage_topk
 
-__all__ = ["AttentionSpec", "attention", "dense_reference", "make_mask"]
+__all__ = [
+    "AttentionSpec", "attention", "camformer_paged_attention",
+    "dense_reference", "make_mask", "topk_softmax_weights",
+]
+
+
+def topk_softmax_weights(top_v, temp, scale):
+    """Softmax over top-k survivors (the hardware's LUT stage).
+
+    top_v: (..., k) raw binary scores with NEG_INF at masked entries;
+    temp: HAD temperature, broadcastable to top_v; scale: 1/sqrt(d).
+    Returns (weights, valid) — weights are exactly 0 at invalid entries
+    (callers must also zero any values gathered for them before a
+    fused multiply-add, to avoid reading garbage at weight 0).
+    """
+    valid = top_v > NEG_INF / 2
+    logits = jnp.where(valid, top_v * temp * scale, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.where(valid, w, 0.0), valid
 
 
 @dataclasses.dataclass(frozen=True)
@@ -208,6 +226,104 @@ def attention(
     idx = top_i[..., None]  # (B,Hkv,G,Sq,K,1)
     v_sel = jnp.take_along_axis(v_exp, idx, axis=-2)  # (B,Hkv,G,Sq,K,Dv)
     out = jnp.einsum("bhgqk,bhgqkd->bhgqd", w.astype(v.dtype), v_sel)
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
+def camformer_paged_attention(
+    q: jax.Array,
+    kp_pages: jax.Array,
+    v_pages: jax.Array,
+    k_scale: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    q_positions: jax.Array,
+    spec: AttentionSpec = AttentionSpec(mode="camformer"),
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+) -> jax.Array:
+    """CAMformer attention against a paged, bit-packed KV cache.
+
+    The serving-engine entry point (Eq. 1 over a page-table-indirected Key
+    SRAM): binary scores + two-stage top-k select on the paged pools, then
+    softmax over the k survivors and a sparse gather of ONLY the selected V
+    rows straight out of the paged pool — no per-slot contiguous ``max_len``
+    key/value buffer is ever materialized.
+
+    Decode rows (Sq == 1) run the fused Pallas paged kernel
+    (kernels/bacam_decode.py): scoring + stage-1 top-k happen page-local
+    via scalar-prefetched page-table DMA and only stage-1 candidates reach
+    this level.  Prefill chunks (Sq > 1) gather the packed keys — 1
+    bit/element, 6.25% of bf16 — into logical order and run the same
+    two-stage selection in XLA.
+
+    Args:
+      q: (B, H, Sq, D) queries (GQA: H = G * H_kv).
+      kp_pages: (P, H_kv, page, D/32) uint32 packed key pool (one layer).
+      v_pages: (P, H_kv, page, Dv) value pool.
+      k_scale: (B, H_kv) running per-slot key scale (softmax temperature).
+      page_table: (B, NP) int32 logical->physical page map (trash-paged
+        rows for unallocated entries).
+      kv_len: (B,) int32 valid tokens per slot.
+      q_positions: (B, Sq) int32 query positions.
+
+    Returns: (B, H, Sq, Dv) in q's dtype.
+    """
+    from repro.core.binarize import sign_pm1
+
+    b, h, sq, d = q.shape
+    _, hkv, page, dv = v_pages.shape
+    g = h // hkv
+    np_ = page_table.shape[1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qb = sign_pm1(q.astype(jnp.float32))
+    q_scale = jnp.mean(jnp.abs(q.astype(jnp.float32)), axis=-1)  # (B,H,Sq)
+    qp = bacam.pack_bits(qb).reshape(b, hkv, g * sq, d // 32)
+    kv_len = kv_len.reshape(b).astype(jnp.int32)
+
+    if sq == 1:
+        # Decode fast path: fused paged scoring + stage-1 top-k kernel.
+        from repro.kernels import ops as kops  # local import: no cycle
+
+        cand_v, cand_i = kops.bacam_paged_scores_topk(
+            qp, kp_pages, page_table, kv_len,
+            q_positions.reshape(b).astype(jnp.int32),
+            d=d, group=spec.group_size, stage1_k=spec.stage1_k,
+            window=window)
+        k_eff = min(spec.k_top, cand_v.shape[-1])
+        top_v, sel = jax.lax.top_k(cand_v, k_eff)
+        top_i = jnp.take_along_axis(cand_i, sel, axis=-1)
+    else:
+        # Prefill chunk: gather packed key pages into logical order.
+        from repro.kernels.ref import paged_gather_ref
+
+        kp = paged_gather_ref(kp_pages, page_table)  # (B, H_kv, S_log, W)
+        scores = bacam.hamming_scores_packed(qp, kp, d)  # (B,Hkv,G*Sq,S)
+        kpos = jnp.arange(np_ * page, dtype=jnp.int32)[None, None, None]
+        qpos = jnp.broadcast_to(q_positions[:, None, :], (b, hkv, sq))
+        qpos = jnp.broadcast_to(qpos[:, :, None, :], (b, hkv, g, sq)).reshape(
+            b, hkv, g * sq)[..., None]
+        ok = (kpos < kv_len.reshape(b, 1, 1, 1)) & (kpos <= qpos)
+        if window is not None:
+            ok = ok & (kpos > qpos - window)
+        masked = jnp.where(ok, scores.astype(jnp.float32), NEG_INF)
+        top_v, top_i = two_stage_topk(
+            masked, k=spec.k_top, group_size=spec.group_size,
+            stage1_k=spec.stage1_k)
+
+    # --- sparse V contextualization straight from the paged pool ---
+    pg = top_i // page  # logical page of each selected key
+    row = top_i % page
+    phys = page_table[jnp.arange(b)[:, None, None, None], pg]  # (B,Hkv,R,K)
+    v_sel = jax.vmap(  # per-kv-head gather: pool is (P, page, Dv) per head
+        lambda vh, ph, rh: vh[ph, rh], in_axes=(1, 1, 1), out_axes=1
+    )(v_pages, phys, row)  # (B, H_kv, R, K, Dv)
+
+    temp = (q_scale.reshape(b, hkv, g * sq)[..., None]
+            * k_scale[:, :, None, None])
+    w, _ = topk_softmax_weights(top_v, temp, scale)
+    out = jnp.einsum("bhrk,bhrkd->bhrd", w.astype(v_pages.dtype), v_sel)
     return out.reshape(b, h, sq, dv).astype(q.dtype)
 
 

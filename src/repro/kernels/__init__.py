@@ -6,6 +6,7 @@ ref.py for the oracles.
 """
 
 from repro.kernels import ops, ref
+from repro.kernels.bacam_decode import bacam_paged_topk_stage1
 from repro.kernels.bacam_mvm import bacam_mvm
 from repro.kernels.bacam_topk import bacam_topk_stage1
 from repro.kernels.bitslice_vmm import bitslice_vmm
@@ -15,6 +16,7 @@ __all__ = [
     "ops",
     "ref",
     "bacam_mvm",
+    "bacam_paged_topk_stage1",
     "bacam_topk_stage1",
     "bitslice_vmm",
     "flash_attention",

@@ -27,6 +27,52 @@ from jax.experimental import pallas as pl
 from repro.kernels.ref import MASKED_SCORE
 
 
+def score_and_stage1(q_words, k_words, ok, *, d, group, stage1_k,
+                     base_offset):
+    """Shared kernel-body block: BA-CAM scoring + stage-1 top-k.
+
+    Used by both the contiguous (this module) and the paged
+    (bacam_decode.py) association kernels so the tie-breaking and masking
+    semantics can never diverge.
+
+    q_words: (R, W) uint32; k_words: (S, W) uint32; ok: (R, S) bool
+    validity mask (the caller's mask source is the only difference
+    between the kernels); base_offset: global index of k_words[0].
+
+    Returns (vals, idx): (R, S/group * stage1_k) int32 — per group the
+    top stage1_k masked scores (MASKED_SCORE when invalid) and their
+    global key indices, group-major / top-k-minor.
+    """
+    rows, words = q_words.shape
+    bk = k_words.shape[0]
+
+    # --- BA-CAM scoring (see bacam_mvm.py) ---
+    acc = jnp.zeros((rows, bk), jnp.int32)
+    for w in range(words):  # static unroll: words = d/32
+        x = jnp.bitwise_xor(q_words[:, w][:, None], k_words[:, w][None, :])
+        acc = acc + jax.lax.population_count(x).astype(jnp.int32)
+    scores = jnp.where(ok, jnp.int32(d) - 2 * acc, MASKED_SCORE)
+
+    # --- stage-1 top-k per group of `group` keys (bitonic top-2 dual) ---
+    ngroups = bk // group
+    sg = scores.reshape(rows, ngroups, group)
+    gidx = jax.lax.broadcasted_iota(jnp.int32, (rows, ngroups, group), 2)
+    vals, idxs = [], []
+    cur = sg
+    for _ in range(stage1_k):  # sequential max-extraction == stable top-k
+        m = cur.max(axis=-1)
+        am = jnp.argmax(cur, axis=-1).astype(jnp.int32)
+        vals.append(m)
+        idxs.append(am)
+        cur = jnp.where(gidx == am[..., None], MASKED_SCORE, cur)
+    v = jnp.stack(vals, axis=-1).reshape(rows, ngroups * stage1_k)
+    base = (base_offset
+            + jax.lax.broadcasted_iota(jnp.int32, (rows, ngroups), 1) * group)
+    gi = jnp.stack([base + a for a in idxs], axis=-1).reshape(
+        rows, ngroups * stage1_k)
+    return v, gi
+
+
 def _kernel(
     q_ref,
     k_ref,
@@ -36,7 +82,6 @@ def _kernel(
     idx_ref,
     *,
     d: int,
-    words: int,
     group: int,
     stage1_k: int,
     block_k: int,
@@ -47,13 +92,6 @@ def _kernel(
     bk = k_ref.shape[1]
     j = pl.program_id(2)
 
-    # --- BA-CAM scoring (see bacam_mvm.py) ---
-    acc = jnp.zeros((bq, bk), jnp.int32)
-    for w in range(words):
-        x = jnp.bitwise_xor(q_ref[0, :, w][:, None], k_ref[0, :, w][None, :])
-        acc = acc + jax.lax.population_count(x).astype(jnp.int32)
-    scores = jnp.int32(d) - 2 * acc
-
     # --- masking from positions (matchline "search enable" in hardware) ---
     kpos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
     qpos = pos_ref[0][:, None]
@@ -62,25 +100,10 @@ def _kernel(
         ok = jnp.logical_and(ok, kpos <= qpos)
     if window is not None:
         ok = jnp.logical_and(ok, kpos > qpos - window)
-    scores = jnp.where(ok, scores, MASKED_SCORE)
 
-    # --- stage-1 top-k per group of `group` keys (bitonic top-2 dual) ---
-    ngroups = bk // group
-    sg = scores.reshape(bq, ngroups, group)
-    gidx = jax.lax.broadcasted_iota(jnp.int32, (bq, ngroups, group), 2)
-    vals, idxs = [], []
-    cur = sg
-    for _ in range(stage1_k):  # sequential max-extraction == stable top-k
-        m = cur.max(axis=-1)
-        am = jnp.argmax(cur, axis=-1).astype(jnp.int32)
-        vals.append(m)
-        idxs.append(am)
-        cur = jnp.where(gidx == am[..., None], MASKED_SCORE, cur)
-    v = jnp.stack(vals, axis=-1).reshape(bq, ngroups * stage1_k)
-    base = j * block_k + jax.lax.broadcasted_iota(jnp.int32, (bq, ngroups), 1) * group
-    gi = jnp.stack([base + a for a in idxs], axis=-1).reshape(bq, ngroups * stage1_k)
-    vals_ref[0] = v
-    idx_ref[0] = gi
+    vals_ref[0], idx_ref[0] = score_and_stage1(
+        q_ref[0], k_ref[0], ok, d=d, group=group, stage1_k=stage1_k,
+        base_offset=j * block_k)
 
 
 @functools.partial(
@@ -125,7 +148,7 @@ def bacam_topk_stage1(
     ncand = stage1_k * (skv // group)
     kern = functools.partial(
         _kernel,
-        d=d, words=words, group=group, stage1_k=stage1_k,
+        d=d, group=group, stage1_k=stage1_k,
         block_k=block_k, causal=causal, window=window,
     )
     return pl.pallas_call(

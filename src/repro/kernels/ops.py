@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.core.bacam import pack_bits
 from repro.core.topk import NEG_INF
+from repro.kernels import bacam_decode as _bdec
 from repro.kernels import bacam_mvm as _mvm
 from repro.kernels import bacam_topk as _btk
 from repro.kernels import bitslice_vmm as _bsv
@@ -23,6 +24,7 @@ __all__ = [
     "bacam_scores",
     "bacam_attention_scores_topk",
     "bacam_attention_scores_topk_packed",
+    "bacam_paged_scores_topk",
     "flash_attention",
     "bitslice_vmm",
     "MASKED_SCORE",
@@ -129,6 +131,42 @@ def bacam_attention_scores_topk_packed(
     idx = idx[:, :r, :ncand]
     fvals = jnp.where(vals <= MASKED_SCORE // 2, NEG_INF, vals.astype(jnp.float32))
     return fvals, jnp.minimum(idx, skv - 1)
+
+
+def bacam_paged_scores_topk(
+    qp: jax.Array,
+    kp_pages: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    q_pos: jax.Array | None = None,
+    *,
+    d: int,
+    group: int = 16,
+    stage1_k: int = 2,
+    window: int | None = None,
+):
+    """Fused paged decode association stage (see bacam_decode.py).
+
+    qp: (B, H_kv, R, W) uint32 decode rows; kp_pages: (P, H_kv, page, W)
+    uint32 pool; page_table: (B, NP) int32; kv_len: (B,) int32; q_pos:
+    (B,) int32 per-slot query position (default: kv_len - 1, the decode
+    tail).
+
+    Returns (cand_vals f32 with NEG_INF at masked, cand_idx i32 logical
+    key indices), shapes (B, H_kv, R, stage1_k * NP*page/group).
+    """
+    page = kp_pages.shape[2]
+    np_ = page_table.shape[1]
+    if q_pos is None:
+        q_pos = kv_len.reshape(-1) - 1
+    vals, idx = _bdec.bacam_paged_topk_stage1(
+        qp, kp_pages, page_table, kv_len, q_pos,
+        d=d, group=group, stage1_k=stage1_k, window=window,
+        interpret=INTERPRET,
+    )
+    fvals = jnp.where(vals <= MASKED_SCORE // 2, NEG_INF,
+                      vals.astype(jnp.float32))
+    return fvals, jnp.clip(idx, 0, np_ * page - 1)
 
 
 def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None, scale=None,

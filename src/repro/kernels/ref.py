@@ -79,6 +79,58 @@ def bacam_topk_stage1_ref(
     return v.reshape(b, r, groups * stage1_k), gi.reshape(b, r, groups * stage1_k)
 
 
+def paged_gather_ref(pages: jax.Array, page_table: jax.Array) -> jax.Array:
+    """Gather a paged pool into per-slot contiguous logical order.
+
+    pages: (n_pages, H_kv, page_size, ...); page_table: (B, NP) int32.
+    Returns (B, H_kv, NP * page_size, ...) — slot-major logical layout.
+    """
+    g = pages[page_table]  # (B, NP, H_kv, page, ...)
+    b, np_, hkv, page = g.shape[:4]
+    g = jnp.moveaxis(g, 2, 1)  # (B, H_kv, NP, page, ...)
+    return g.reshape(b, hkv, np_ * page, *g.shape[4:])
+
+
+def bacam_paged_topk_ref(
+    q_packed: jax.Array,
+    kp_pages: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    d: int,
+    *,
+    q_pos: jax.Array | None = None,
+    group_size: int = 16,
+    stage1_k: int = 2,
+    window: int | None = None,
+):
+    """Oracle for the fused paged decode kernel (bacam_decode.py).
+
+    q_packed: (B, H_kv, R, W); kp_pages: (P, H_kv, page, W);
+    page_table: (B, NP); kv_len: (B,); q_pos: (B,) query position per
+    slot (default kv_len - 1, the decode tail).  Returns
+    (cand_vals, cand_idx) of shape (B, H_kv, R, stage1_k * NP*page/group)
+    int32, logical-page-major.
+    """
+    b, hkv, r, w = q_packed.shape
+    kp = paged_gather_ref(kp_pages, page_table)  # (B, H_kv, S_log, W)
+    s_log = kp.shape[2]
+    s = bacam_scores_ref(
+        q_packed.reshape(b * hkv, r, w), kp.reshape(b * hkv, s_log, w), d)
+    if q_pos is None:
+        q_pos = kv_len - 1
+    qpos = jnp.broadcast_to(q_pos[:, None, None], (b, hkv, r))
+    kvl = jnp.broadcast_to(kv_len[:, None], (b, hkv)).reshape(b * hkv)
+    s = masked_scores_ref(
+        s, qpos.reshape(b * hkv, r), causal=True, window=window, kv_len=kvl)
+    groups = s_log // group_size
+    sg = s.reshape(b * hkv, r, groups, group_size)
+    v, i = jax.lax.top_k(sg, stage1_k)
+    gi = i.astype(jnp.int32) + (
+        jnp.arange(groups, dtype=jnp.int32) * group_size)[None, None, :, None]
+    ncand = groups * stage1_k
+    return (v.reshape(b, hkv, r, ncand), gi.reshape(b, hkv, r, ncand))
+
+
 def flash_attention_ref(q, k, v, *, causal=True, q_offset=0, scale=None, window=None):
     """Naive softmax attention, (B, S, D) per-head layout.
 

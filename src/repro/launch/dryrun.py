@@ -134,7 +134,9 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, attn_mode=None,
     cfg, md, fn, args, n_params, note = build_cell(arch, shape, mesh,
                                                    attn_mode, dist_topk,
                                                    prefill_chunk)
-    jax.set_mesh(mesh)  # installs the ambient mesh for constrain()
+    from repro.utils import compat
+
+    compat.set_mesh(mesh)  # installs the ambient mesh for constrain()
     with mesh:
         lowered = fn.lower(*args)
         t_lower = time.time() - t0

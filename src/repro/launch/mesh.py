@@ -3,24 +3,21 @@ touches jax device state)."""
 
 from __future__ import annotations
 
-import jax
+from repro.utils import compat
 
 __all__ = ["make_production_mesh", "make_mesh_for"]
-
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; multi-pod adds a leading 2-pod axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return compat.make_mesh(shape, axes,
+                            axis_types=compat.axis_type_auto(len(axes)))
 
 
 def make_mesh_for(devices: int, model_parallel: int = 1, axes=("data", "model")):
     """Small helper for tests/examples on arbitrary device counts."""
     assert devices % model_parallel == 0
-    return jax.make_mesh((devices // model_parallel, model_parallel), axes,
-                         axis_types=_auto(len(axes)))
+    return compat.make_mesh((devices // model_parallel, model_parallel), axes,
+                            axis_types=compat.axis_type_auto(len(axes)))

@@ -23,15 +23,28 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=64,
+                    help="paged-cache page size (camformer mode)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="page-pool size; default = full residency")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill chunk length (0 = whole prompt)")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.attn_mode:
         cfg = cfg.replace(attn_mode=args.attn_mode)
+    if args.prefill_chunk is not None:
+        cfg = cfg.replace(prefill_chunk=args.prefill_chunk)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
-                      max_len=args.max_len)
+                      max_len=args.max_len, page_size=args.page_size,
+                      n_pages=args.n_pages)
+    if eng.paged:
+        print(f"paged KV cache: {eng.kv.n_pages} pages x "
+              f"{eng.kv.page_size} tokens "
+              f"(packed keys, page table {eng.kv.table.shape})")
     rng = jax.random.PRNGKey(7)
     for i in range(args.requests):
         rng, sub = jax.random.split(rng)

@@ -19,15 +19,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import bacam
-from repro.core.attention import AttentionSpec, attention
+from repro.core.attention import (AttentionSpec, attention,
+                                  camformer_paged_attention,
+                                  topk_softmax_weights)
 from repro.core.binarize import sign_pm1
 from repro.core.topk import NEG_INF, two_stage_topk
 from repro.models.layers import rope
 from repro.models.module import Param
 from repro.sharding.partitioning import constrain
+from repro.utils import compat
 
 __all__ = [
-    "attn_specs", "attn_cache_spec", "attention_block", "spec_from_cfg",
+    "attn_specs", "attn_cache_spec", "attn_page_spec", "attention_block",
+    "spec_from_cfg",
 ]
 
 
@@ -74,6 +78,70 @@ def attn_cache_spec(cfg, batch: int, cache_len: int, dtype):
         "v": (jax.ShapeDtypeStruct((batch, hkv, cache_len, d), dtype),
               ("batch", "kv_heads", "kv_seq", "head_dim")),
     }
+
+
+def attn_page_spec(cfg, n_pages: int, page_size: int, max_batch: int, dtype):
+    """ShapeDtypeStructs + logical axes for one layer's PAGED self-attn
+    cache (serving/kv_cache.py layout): bit-packed keys and dense values in
+    fixed-size physical pages, plus the per-slot running key scale."""
+    hkv, d = cfg.n_kv_heads, cfg.head_dim
+    if cfg.attn_mode != "camformer":
+        raise ValueError("paged KV cache requires attn_mode='camformer'")
+    if page_size % cfg.group_size != 0:
+        raise ValueError(
+            f"page_size={page_size} must tile by group_size={cfg.group_size}")
+    return {
+        "kp_pages": (jax.ShapeDtypeStruct(
+            (n_pages, hkv, page_size, d // 32), jnp.uint32),
+            (None, "kv_heads", None, None)),
+        "v_pages": (jax.ShapeDtypeStruct(
+            (n_pages, hkv, page_size, d), dtype),
+            (None, "kv_heads", None, "head_dim")),
+        "k_scale": (jax.ShapeDtypeStruct((max_batch, hkv), jnp.float32),
+                    ("batch", "kv_heads")),
+    }
+
+
+def _paged_write(cache, k, v, positions, page_table, kv_len, cfg):
+    """Splice new K/V into the paged pools at their logical positions.
+
+    k, v: (B, H_kv, S, D); positions: (B, S) logical token positions;
+    kv_len: (B,) — valid tokens per slot INCLUDING this write (prefill:
+    the true prompt length; decode: pos + 1).  Tokens at positions >=
+    kv_len are right-padding: their page-table entries resolve to the
+    trash page and they are excluded from the k_scale running mean.
+    """
+    page = cache["kp_pages"].shape[2]
+    b, hkv, s, _ = k.shape
+    pos = positions.astype(jnp.int32)
+    kv_len = kv_len.reshape(b).astype(jnp.int32)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    phys = page_table[bidx, pos // page]  # (B, S) physical pages
+    row = pos % page
+
+    kp = bacam.pack_bits(sign_pm1(k))  # (B, H_kv, S, W)
+    new_kp = cache["kp_pages"].at[phys, :, row].set(kp.transpose(0, 2, 1, 3))
+    new_v = cache["v_pages"].at[phys, :, row].set(
+        v.astype(cache["v_pages"].dtype).transpose(0, 2, 1, 3))
+
+    # Running per-slot/head key scale over VALID tokens only.
+    valid = (pos < kv_len[:, None]).astype(jnp.float32)  # (B, S)
+    mean_d = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)  # (B,Hkv,S)
+    new_sum = jnp.einsum("bhs,bs->bh", mean_d, valid)
+    cnt = jnp.sum(valid, axis=-1)  # (B,)
+    prior = jnp.minimum(pos[:, 0], kv_len).astype(jnp.float32)
+    total = prior + cnt
+    ks = ((cache["k_scale"] * prior[:, None] + new_sum)
+          / jnp.maximum(total, 1.0)[:, None])
+    ks = jnp.where((total > 0)[:, None], ks, cache["k_scale"])
+    return {"kp_pages": new_kp, "v_pages": new_v, "k_scale": ks}
+
+
+def _paged_cam_attend(q, cache, page_table, kv_len, positions, cfg, spec):
+    """Decode/prefill attention against the paged bit-packed cache."""
+    return camformer_paged_attention(
+        q, cache["kp_pages"], cache["v_pages"], cache["k_scale"],
+        page_table, kv_len, positions, spec, window=cfg.window)
 
 
 def _project(p, x, cfg, training: bool = True):
@@ -125,7 +193,7 @@ def _attn_strategy(cfg, training: bool = True) -> str:
                rematerialization, kv_seq keeps bwd local modulo small
                softmax-stat reduces + the AV partial-sum all-reduce.
     """
-    env = jax.sharding.get_abstract_mesh()
+    env = compat.get_abstract_mesh()
     if env is None or "model" not in getattr(env, "shape", {}):
         return "none"
     m = env.shape["model"]
@@ -187,7 +255,7 @@ def _distributed_cam_attend(q, cache, kv_len, positions, cfg, spec):
     redundantly everywhere, and contextualization is a masked partial sum
     over local V rows finished by one psum.
     """
-    env = jax.sharding.get_abstract_mesh()
+    env = compat.get_abstract_mesh()
     axes = tuple(a for a in ("pod", "data", "model")
                  if a in getattr(env, "shape", {}) and env.shape[a] > 1)
     if not axes:
@@ -234,9 +302,7 @@ def _distributed_cam_attend(q, cache, kv_len, positions, cfg, spec):
         scale = 1.0 / (d**0.5)
         temp = (qscale_l.reshape(b, hkv, g * sq)[..., None]
                 * kscale_l[:, :, None, None])
-        valid = top_v > NEG_INF / 2
-        logits = jnp.where(valid, top_v * temp * scale, NEG_INF)
-        w = jax.nn.softmax(logits, axis=-1)  # (B,Hkv,R,k)
+        w, valid = topk_softmax_weights(top_v, temp, scale)  # (B,Hkv,R,k)
         # partial contextualization over local V rows
         mine = (top_i >= offset) & (top_i < offset + s_local) & valid
         loc = jnp.clip(top_i - offset, 0, s_local - 1)
@@ -248,7 +314,7 @@ def _distributed_cam_attend(q, cache, kv_len, positions, cfg, spec):
         return jax.lax.psum(contrib, axes)
 
     seq_spec = P(None, None, axes, None)
-    out = jax.shard_map(
+    out = compat.shard_map(
         local_fn,
         mesh=env,
         in_specs=(P(), seq_spec,
@@ -316,9 +382,7 @@ def _camformer_cache_attend(q, cache, kv_len, positions, cfg, spec,
 
     scale = 1.0 / (d**0.5)
     temp = q_scale.reshape(b, hkv, g, sq)[..., None] * cache["k_scale"][:, :, None, None, None]
-    valid = top_v > NEG_INF / 2
-    logits = jnp.where(valid, top_v * temp * scale, NEG_INF)
-    w = jax.nn.softmax(logits, axis=-1)
+    w, _ = topk_softmax_weights(top_v, temp, scale)
     v_exp = cache["v"][:, :, None, None]  # (B,Hkv,1,1,Skv,Dv)
     v_sel = jnp.take_along_axis(v_exp, top_i[..., None], axis=-2)
     out = jnp.einsum("bhgqk,bhgqkd->bhgqd", w.astype(cache["v"].dtype), v_sel)
@@ -335,6 +399,7 @@ def attention_block(
     cache_index=None,
     kv_len=None,
     kv_positions=None,
+    page_table=None,
     causal: bool = True,
     window: int | None = None,
     cross_kv=None,
@@ -345,6 +410,9 @@ def attention_block(
       train:          cache=None                       — full self-attention
       prefill:        cache empty, cache_index=0       — attn + cache write
       decode:         cache filled, cache_index=pos    — 1-token query
+      paged serving:  cache is a page-pool dict, page_table set — prefill
+                      chunks and decode both splice into pages and attend
+                      through the page table (no contiguous KV buffer)
       cross-attention: cross_kv=(k, v) precomputed     — no cache write
     """
     b, s, _ = x.shape
@@ -361,6 +429,16 @@ def attention_block(
         if getattr(cfg, "use_rope", True):
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
+        if cache is not None and "kp_pages" in cache:
+            if page_table is None or kv_len is None:
+                raise ValueError("paged cache needs page_table and kv_len")
+            new_cache = _paged_write(
+                cache, k, v, positions, page_table, kv_len, cfg)
+            out = _paged_cam_attend(
+                q, new_cache, page_table, kv_len, positions, cfg, spec)
+            out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
+            out = constrain(out, ("batch", "seq", "heads"))
+            return (out @ p["wo"].astype(dt)), new_cache
         new_cache = _write_cache(
             cache, k, v,
             cache_index if cache_index is not None else jnp.int32(0), cfg)

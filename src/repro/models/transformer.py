@@ -20,12 +20,14 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import moe as M
-from repro.models.attention import attn_cache_spec, attn_specs, attention_block
+from repro.models.attention import (attn_cache_spec, attn_page_spec,
+                                    attn_specs, attention_block)
 from repro.models.module import Param, is_param
 from repro.sharding.partitioning import constrain
 
 __all__ = ["ModelDef", "stack_specs", "lm_specs", "lm_hidden", "lm_loss",
-           "lm_prefill", "lm_decode", "lm_cache_specs", "dtype_of"]
+           "lm_prefill", "lm_decode", "lm_cache_specs", "lm_page_specs",
+           "lm_prefill_paged", "lm_decode_paged", "dtype_of"]
 
 
 class ModelDef(NamedTuple):
@@ -36,6 +38,13 @@ class ModelDef(NamedTuple):
     prefill: Callable[..., Any]  # (params, batch, cache, cfg) -> (logits, cache)
     decode: Callable[..., Any]  # (params, tokens, pos, kv_len, cache, cfg) -> (logits, cache)
     cache_specs: Callable[..., Any]  # (cfg, batch, cache_len) -> tree of (SDS, axes)
+    # Paged-serving interface (None for families without a paged cache):
+    # page_specs(cfg, n_pages, page_size, max_batch) -> tree of (SDS, axes)
+    # prefill_paged(params, batch{tokens,lens}, pools, page_table, cfg)
+    # decode_paged(params, tokens, pos, kv_len, pools, page_table, cfg)
+    page_specs: Optional[Callable[..., Any]] = None
+    prefill_paged: Optional[Callable[..., Any]] = None
+    decode_paged: Optional[Callable[..., Any]] = None
 
 
 def dtype_of(cfg):
@@ -58,11 +67,11 @@ def _block_specs(cfg):
 
 
 def _apply_block(p, x, cfg, *, positions, cache=None, cache_index=None,
-                 kv_len=None, causal=True):
+                 kv_len=None, page_table=None, causal=True):
     h, new_cache = attention_block(
         p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg,
         positions=positions, cache=cache, cache_index=cache_index,
-        kv_len=kv_len, causal=causal)
+        kv_len=kv_len, page_table=page_table, causal=causal)
     x = constrain(x + h, ("batch", "res_seq", "embed"))
     ff_in = L.apply_norm(p["ln2"], x, cfg)
     if cfg.n_experts:
@@ -82,7 +91,7 @@ def lm_specs(cfg):
 
 
 def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
-                 kv_len=None, causal=True):
+                 kv_len=None, page_table=None, causal=True):
     """Run the layer stack; returns (x, new_caches, aux_sums)."""
 
     def body(carry, xs):
@@ -92,7 +101,8 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
             layer_cache = None
         h, new_cache, aux = _apply_block(
             layer_p, h, cfg, positions=positions, cache=layer_cache,
-            cache_index=cache_index, kv_len=kv_len, causal=causal)
+            cache_index=cache_index, kv_len=kv_len, page_table=page_table,
+            causal=causal)
         aux_vec = jnp.stack(
             [aux.get("moe_aux_loss", jnp.float32(0)),
              aux.get("moe_drop_frac", jnp.float32(0))])
@@ -126,7 +136,8 @@ def _none_caches(cfg):
 
 
 def lm_hidden(params, tokens, cfg, *, positions=None, caches=None,
-              cache_index=None, kv_len=None, causal=True, prefix_embeds=None):
+              cache_index=None, kv_len=None, page_table=None, causal=True,
+              prefix_embeds=None):
     """tokens (B, S) -> final hidden states (B, S[+P], d)."""
     dt = dtype_of(cfg)
     x = L.embed_lookup(params["embed"], tokens, cfg, dt)
@@ -142,7 +153,8 @@ def lm_hidden(params, tokens, cfg, *, positions=None, caches=None,
         caches = _none_caches(cfg)
     x, new_caches, aux = _scan_blocks(
         params, x, cfg, positions=positions, caches=caches,
-        cache_index=cache_index, kv_len=kv_len, causal=causal)
+        cache_index=cache_index, kv_len=kv_len, page_table=page_table,
+        causal=causal)
     x = L.apply_norm(params["ln_f"], x, cfg)
     # loss/head consumers slice along seq: hand them a seq-replicated copy
     x = constrain(x, ("batch", None, "embed"))
@@ -214,6 +226,67 @@ def lm_prefill(params, batch, caches, cfg):
     return logits, caches
 
 
+def lm_page_specs(cfg, n_pages: int, page_size: int, max_batch: int):
+    """Layer-stacked paged-pool specs (serving/kv_cache.py layout)."""
+    dt = dtype_of(cfg)
+    one = attn_page_spec(cfg, n_pages, page_size, max_batch, dt)
+    return {
+        k: (jax.ShapeDtypeStruct((cfg.n_layers,) + sds.shape, sds.dtype),
+            ("layers",) + axes)
+        for k, (sds, axes) in one.items()
+    }
+
+
+def lm_prefill_paged(params, batch, caches, page_table, cfg):
+    """Batched prefill into the paged cache.
+
+    batch: tokens (B, S) right-padded prompts, lens (B,) true lengths
+    (lens == 0 marks an inactive slot whose page-table row must point at
+    the trash page).  With cfg.prefill_chunk set and S a chunk multiple,
+    the prompt batch is processed in chunks that attend to the pages
+    written so far (chunked prefill, activation memory bounded by the
+    chunk).  Returns (per-slot last-prompt-token logits (B, V), pools).
+    """
+    tokens, lens = batch["tokens"], batch["lens"].astype(jnp.int32)
+    b, s = tokens.shape
+    chunk = cfg.prefill_chunk
+    if chunk and s > chunk and s % chunk == 0:
+        n = s // chunk
+        toks = tokens.reshape(b, n, chunk).swapaxes(0, 1)  # (n, B, chunk)
+
+        def body(cs, xs):
+            i, tk = xs
+            pos = (i * chunk
+                   + jnp.arange(chunk, dtype=jnp.int32))[None].repeat(b, 0)
+            x, cs, _ = lm_hidden(
+                params, tk, cfg, positions=pos, caches=cs, kv_len=lens,
+                page_table=page_table, causal=True)
+            return cs, x
+
+        caches, xs = jax.lax.scan(
+            body, caches, (jnp.arange(n, dtype=jnp.int32), toks))
+        x = xs.swapaxes(0, 1).reshape(b, s, -1)  # (B, S, d)
+    else:
+        x, caches, _ = lm_hidden(
+            params, tokens, cfg, caches=caches, kv_len=lens,
+            page_table=page_table, causal=True)
+    last = jnp.take_along_axis(
+        x, jnp.maximum(lens - 1, 0)[:, None, None].astype(jnp.int32),
+        axis=1)[:, 0]
+    return _head_logits(params, last, cfg), caches
+
+
+def lm_decode_paged(params, tokens, pos, kv_len, caches, page_table, cfg):
+    """One decode step against the paged cache. tokens/pos/kv_len: (B,)."""
+    b = tokens.shape[0]
+    positions = pos.reshape(b, 1).astype(jnp.int32)
+    x, caches, _ = lm_hidden(
+        params, tokens.reshape(b, 1), cfg, positions=positions,
+        caches=caches, kv_len=kv_len.astype(jnp.int32),
+        page_table=page_table, causal=True)
+    return _last_logits(params, x, cfg), caches
+
+
 def lm_decode(params, tokens, pos, kv_len, caches, cfg):
     """One decode step. tokens (B,), pos (B,), kv_len (B,).
 
@@ -229,8 +302,12 @@ def lm_decode(params, tokens, pos, kv_len, caches, cfg):
 
 
 def _last_logits(params, x, cfg):
-    dt = x.dtype
-    last = x[:, -1]
+    return _head_logits(params, x[:, -1], cfg)
+
+
+def _head_logits(params, last, cfg):
+    """Vocabulary logits for per-slot final hidden states last (B, d)."""
+    dt = last.dtype
     if cfg.tie_embeddings:
         head = params["embed"]["tok"].astype(dt).T
     else:
@@ -250,4 +327,7 @@ def make_model_def():
         prefill=lm_prefill,
         decode=lm_decode,
         cache_specs=lm_cache_specs,
+        page_specs=lm_page_specs,
+        prefill_paged=lm_prefill_paged,
+        decode_paged=lm_decode_paged,
     )

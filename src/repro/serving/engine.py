@@ -1,12 +1,23 @@
 """Batched serving engine with continuous batching.
 
 Slot-based scheduling over a fixed decode batch: finished sequences free
-their slot, queued prompts are prefilled (batch-of-one) and spliced into
-the shared KV cache at the free slot, and every engine step decodes all
-active slots at their own positions (ragged positions / kv lengths are
-native to the attention masking).  With `attn_mode="camformer"` the cache
-stores bit-packed keys and each step performs the paper's CAM search +
-two-stage top-k against the growing cache.
+their slot, queued prompts are prefilled and spliced into the shared KV
+cache, and every engine step decodes all active slots at their own
+positions (ragged positions / kv lengths are native to the attention
+masking).
+
+Two cache regimes:
+
+  * paged (``attn_mode="camformer"`` on models exposing the paged
+    interface): keys live bit-packed in fixed-size pages with a free-list
+    allocator (serving/kv_cache.py) — a slot owns pages for the tokens it
+    actually needs (prompt + max_new), not a contiguous ``max_len``
+    reservation, so the same pool admits far more concurrent sequences.
+    Admission prefills ALL newly admitted prompts in one batched (and,
+    with cfg.prefill_chunk, chunked) forward; decode runs the fused Pallas
+    paged CAM kernel (kernels/bacam_decode.py) every step.
+  * dense (everything else): the seed behavior — per-slot contiguous
+    buffers of ``max_len``, batch-of-one prefill spliced at the free slot.
 """
 
 from __future__ import annotations
@@ -21,8 +32,12 @@ import numpy as np
 from repro.launch.steps import cast_params
 from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
+from repro.serving.kv_cache import TRASH_PAGE, PagedKVCache, pages_for
 
 __all__ = ["Request", "ServeEngine"]
+
+# Right-pad prompt batches to a multiple of this (bounds jit retraces).
+PREFILL_BUCKET = 16
 
 
 @dataclasses.dataclass
@@ -36,32 +51,70 @@ class Request:
 
 class ServeEngine:
     def __init__(self, md, cfg, params, *, max_batch: int = 8,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0,
+                 page_size: int = 64, n_pages: Optional[int] = None):
         self.md, self.cfg = md, cfg
         self.params = cast_params(params, dtype_of(cfg))
         self.max_batch, self.max_len = max_batch, max_len
         self.rng = jax.random.PRNGKey(seed)
 
-        caches = md.cache_specs(cfg, max_batch, max_len)
+        self.paged = (getattr(cfg, "attn_mode", "dense") == "camformer"
+                      and getattr(md, "page_specs", None) is not None)
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
-        self.caches = jax.tree.map(
-            lambda t: jnp.zeros(t[0].shape, t[0].dtype), caches, is_leaf=is_leaf)
+        zeros = lambda t: jnp.zeros(t[0].shape, t[0].dtype)
+        if self.paged:
+            # prefill pads prompt batches to prefill_chunk multiples capped
+            # at max_len; an indivisible max_len would silently skip the
+            # chunked path (and its activation-memory bound) at the cap
+            chunk = getattr(cfg, "prefill_chunk", 0)
+            if chunk and max_len % chunk != 0:
+                raise ValueError(
+                    f"max_len={max_len} must be a multiple of "
+                    f"prefill_chunk={chunk} for paged serving")
+            per_seq = pages_for(max_len, page_size)
+            if n_pages is None:
+                # Default: full residency (every slot can reach max_len).
+                # Smaller pools trade capacity for admission backpressure.
+                n_pages = 1 + max_batch * per_seq  # +1: trash page
+            self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
+            specs = md.page_specs(cfg, n_pages, page_size, max_batch)
+            self.caches = jax.tree.map(zeros, specs, is_leaf=is_leaf)
+            self._decode = jax.jit(
+                lambda p, t, pos, kvl, c, pt: md.decode_paged(
+                    p, t, pos, kvl, c, pt, cfg))
+            self._prefill = jax.jit(
+                lambda p, b, c, pt: md.prefill_paged(p, b, c, pt, cfg))
+        else:
+            caches = md.cache_specs(cfg, max_batch, max_len)
+            self.caches = jax.tree.map(zeros, caches, is_leaf=is_leaf)
+            self._decode = jax.jit(
+                lambda p, t, pos, kvl, c: md.decode(p, t, pos, kvl, c, cfg))
+            self._prefill = jax.jit(
+                lambda p, b, c: md.prefill(p, b, c, cfg))
 
         self.pos = np.zeros(max_batch, np.int32)  # next position per slot
         self.active: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.done: List[Request] = []
-        self._decode = jax.jit(
-            lambda p, t, pos, kvl, c: md.decode(p, t, pos, kvl, c, cfg))
-        self._prefill = jax.jit(
-            lambda p, b, c: md.prefill(p, b, c, cfg))
 
     # ------------------------------------------------------------------
     def submit(self, req: Request):
         req.tokens = []
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new "
+                f"{len(req.prompt) + req.max_new_tokens} > max_len "
+                f"{self.max_len}")
         self.queue.append(req)
 
+    def _next_rng(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    # -- dense (seed) admission ----------------------------------------
     def _splice_cache(self, slot: int, one_cache):
         """Insert a batch-of-one prefill cache into the shared cache."""
         def ins(big, small):
@@ -74,7 +127,7 @@ class ServeEngine:
             return big.at[tuple(idx)].set(small)
         self.caches = jax.tree.map(ins, self.caches, one_cache)
 
-    def _admit(self):
+    def _admit_dense(self):
         for slot in range(self.max_batch):
             if self.active[slot] is not None or not self.queue:
                 continue
@@ -95,14 +148,74 @@ class ServeEngine:
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
 
-    def _next_rng(self):
-        self.rng, sub = jax.random.split(self.rng)
-        return sub
+    # -- paged admission: batched (chunked) prefill --------------------
+    def _admit_paged(self):
+        admitted: List[tuple] = []
+        for slot in range(self.max_batch):
+            if self.active[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = len(req.prompt) + req.max_new_tokens
+            if not self.kv.can_reserve(need, slot):
+                break  # page pressure: keep FIFO order, retry next tick
+            self.queue.pop(0)
+            self.kv.reserve(slot, need)  # whole request up front: decode
+            #                              can never hit pool-OOM mid-flight
+            admitted.append((slot, req))
+        if not admitted:
+            if self.queue and all(r is None for r in self.active):
+                req = self.queue[0]  # nothing in flight will ever free pages
+                raise MemoryError(
+                    f"request {req.rid} needs "
+                    f"{pages_for(len(req.prompt) + req.max_new_tokens, self.kv.page_size)}"
+                    f" pages; pool has {self.kv.n_pages - 1}")
+            return
+        bucket = self.cfg.prefill_chunk or PREFILL_BUCKET
+        maxp = max(len(r.prompt) for _, r in admitted)
+        s = min(-(-maxp // bucket) * bucket, self.max_len)
+        tokens = np.zeros((self.max_batch, s), np.int32)
+        lens = np.zeros(self.max_batch, np.int32)
+        temps = np.zeros(self.max_batch, np.float32)
+        for slot, req in admitted:
+            tokens[slot, :len(req.prompt)] = req.prompt
+            lens[slot] = len(req.prompt)
+            temps[slot] = req.temperature
+        # Non-admitted rows (inactive or mid-generation) are dummies: route
+        # their padded-prompt writes to the trash page, NOT their own pages.
+        pt = np.where(lens[:, None] > 0, self.kv.table, TRASH_PAGE)
+        batch = {"tokens": jnp.asarray(tokens), "lens": jnp.asarray(lens)}
+        logits, self.caches = self._prefill(
+            self.params, batch, self.caches, jnp.asarray(pt))
+        first = np.asarray(
+            S.sample_batch(logits, self._next_rng(), jnp.asarray(temps)))
+        for slot, req in admitted:
+            req.tokens.append(int(first[slot]))
+            self.active[slot] = req
+            self.pos[slot] = len(req.prompt)
+
+    def _admit(self):
+        if self.paged:
+            self._admit_paged()
+        else:
+            self._admit_dense()
+
+    def _retire(self):
+        """Move finished requests out of their slots, freeing pages."""
+        for i, r in enumerate(self.active):
+            if r is None:
+                continue
+            if (len(r.tokens) >= r.max_new_tokens
+                    or self.pos[i] >= self.max_len - 1):
+                self.done.append(r)
+                self.active[i] = None
+                if self.paged:
+                    self.kv.release(i)
 
     # ------------------------------------------------------------------
     def step(self):
         """One engine tick: admit new requests, decode all active slots."""
         self._admit()
+        self._retire()  # e.g. max_new_tokens == 1: done at prefill
         if not any(r is not None for r in self.active):
             return False
         tokens = np.zeros(self.max_batch, np.int32)
@@ -111,8 +224,13 @@ class ServeEngine:
                 tokens[i] = r.tokens[-1]
         pos = jnp.asarray(self.pos)
         kv_len = jnp.asarray(self.pos + 1)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tokens), pos, kv_len, self.caches)
+        if self.paged:
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tokens), pos, kv_len, self.caches,
+                jnp.asarray(self.kv.table))
+        else:
+            logits, self.caches = self._decode(
+                self.params, jnp.asarray(tokens), pos, kv_len, self.caches)
         nxt = S.greedy(logits)
         nxt_host = np.asarray(nxt)
         for i, r in enumerate(self.active):
@@ -120,10 +238,7 @@ class ServeEngine:
                 continue
             r.tokens.append(int(nxt_host[i]))
             self.pos[i] += 1
-            if (len(r.tokens) >= r.max_new_tokens
-                    or self.pos[i] >= self.max_len - 1):
-                self.done.append(r)
-                self.active[i] = None
+        self._retire()
         return True
 
     def run(self):

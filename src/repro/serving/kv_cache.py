@@ -1,0 +1,108 @@
+"""Paged, bit-packed KV cache for the serving engine.
+
+Memory layout (per transformer layer, stacked along a leading `layers` axis
+by the model's ``page_specs``):
+
+  * ``kp_pages``: (n_pages, H_kv, page_size, d/32) uint32 — keys bit-packed
+    exactly as ``core/binarize`` + ``core/bacam.pack_bits`` produce them
+    (the paper's Key SRAM holds binarized keys; 6.25% of the bf16 footprint).
+  * ``v_pages``:  (n_pages, H_kv, page_size, d) model dtype — fp16/bf16
+    values, gathered sparsely (only the top-k selected rows) at attend time.
+  * ``k_scale``:  (max_batch, H_kv) float32 — running per-slot/head key
+    scale (softmax temperature bookkeeping; per sequence, not per page).
+
+Sequences own *pages*, not contiguous ``max_len`` spans: a slot's logical
+token position ``p`` lives at row ``p % page_size`` of physical page
+``page_table[slot, p // page_size]``.  The page table is host-managed by a
+free-list allocator and shared by every layer (all layers append in
+lockstep, vLLM-style), so continuous batching admits requests whenever
+pages — not a whole ``max_len`` slot reservation — are available.
+
+Physical page 0 is reserved as the TRASH page: page-table rows of inactive
+or padded slots point at it, so their (masked, never-read) cache writes land
+somewhere harmless instead of clobbering live sequences.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+__all__ = ["PagedKVCache", "TRASH_PAGE", "pages_for"]
+
+TRASH_PAGE = 0  # physical page 0 is never allocated
+
+
+def pages_for(n_tokens: int, page_size: int) -> int:
+    """Number of pages needed to hold n_tokens."""
+    return -(-max(n_tokens, 0) // page_size)
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Host-side page-table + free-list allocator over the device pools.
+
+    The device-side pools themselves live with the engine (they are jitted
+    function state); this object owns which physical page belongs to which
+    slot and hands out / reclaims pages.
+    """
+
+    n_pages: int
+    page_size: int
+    max_batch: int
+    max_pages_per_seq: int
+
+    def __post_init__(self):
+        if self.n_pages < 2:
+            raise ValueError("need at least 2 pages (page 0 is reserved)")
+        # LIFO free list; page 0 reserved as the trash page.
+        self._free: List[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
+        self._owned: List[List[int]] = [[] for _ in range(self.max_batch)]
+        self.table = np.full((self.max_batch, self.max_pages_per_seq),
+                             TRASH_PAGE, np.int32)
+
+    # -- capacity ------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return (self.n_pages - 1) - len(self._free)
+
+    def can_reserve(self, n_tokens: int, slot: int | None = None) -> bool:
+        """Can a (possibly partially-grown) slot cover n_tokens total?"""
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages_per_seq:  # reserve() would refuse
+            return False
+        have = len(self._owned[slot]) if slot is not None else 0
+        return need - have <= len(self._free)
+
+    # -- alloc / free --------------------------------------------------
+    def reserve(self, slot: int, n_tokens: int) -> None:
+        """Grow `slot` to cover n_tokens logical tokens (idempotent)."""
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens needs {need} pages > "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        owned = self._owned[slot]
+        while len(owned) < need:
+            if not self._free:
+                raise MemoryError(
+                    f"page pool exhausted growing slot {slot} to "
+                    f"{n_tokens} tokens")
+            page = self._free.pop()
+            self.table[slot, len(owned)] = page
+            owned.append(page)
+
+    def release(self, slot: int) -> None:
+        """Return all of `slot`'s pages to the free list."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self.table[slot, :] = TRASH_PAGE
+
+    def owned(self, slot: int) -> List[int]:
+        return list(self._owned[slot])

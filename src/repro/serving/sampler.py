@@ -5,7 +5,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["greedy", "sample"]
+__all__ = ["greedy", "sample", "sample_batch"]
 
 
 def greedy(logits: jax.Array) -> jax.Array:
@@ -22,3 +22,16 @@ def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 1.0,
         kth = jax.lax.top_k(l, top_k)[0][..., -1:]
         l = jnp.where(l < kth, -1e9, l)
     return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+
+
+def sample_batch(logits: jax.Array, rng: jax.Array,
+                 temperatures: jax.Array) -> jax.Array:
+    """Per-row temperature sampling for a batched prefill.
+
+    logits: (B, V); temperatures: (B,) — rows with temperature <= 0 are
+    greedy, the rest are categorical at their own temperature.
+    """
+    t = jnp.asarray(temperatures, jnp.float32)
+    safe_t = jnp.where(t > 0, t, 1.0)[:, None]
+    samp = jax.random.categorical(rng, logits / safe_t, axis=-1)
+    return jnp.where(t > 0, samp.astype(jnp.int32), greedy(logits))

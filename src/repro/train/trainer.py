@@ -81,7 +81,9 @@ class Trainer:
 
     # ------------------------------------------------------------------
     def run(self):
-        jax.set_mesh(self.mesh)
+        from repro.utils import compat
+
+        compat.set_mesh(self.mesh)
         state, start = self.restore_or_init()
         times = []
         step = start

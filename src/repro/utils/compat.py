@@ -1,0 +1,134 @@
+"""Version-compat shims over the jax mesh/sharding API surface.
+
+The codebase is written against the modern ambient-mesh API
+(``jax.set_mesh`` / ``jax.sharding.get_abstract_mesh`` / ``jax.shard_map`` /
+``jax.make_mesh(..., axis_types=...)``).  Older jaxlib pins (0.4.x — the CI
+CPU image) predate parts of it; every call site goes through this module so
+the fallback logic lives in exactly one place.
+
+Fallback semantics on 0.4.x:
+
+  * ``get_abstract_mesh()`` returns the ambient ``AbstractMesh`` when one is
+    installed, else the physical mesh from the ``with mesh:`` thread-local
+    context, else ``None``.  Callers treat ``None``/empty-shape as "no mesh".
+  * ``set_mesh(mesh)`` installs ``mesh`` as the ambient mesh process-wide
+    (enters both the abstract-mesh context and the legacy ``with mesh:``
+    context and keeps them open — matching the modern global setter).
+  * ``shard_map`` resolves an ``AbstractMesh`` argument to the physical mesh
+    before delegating to ``jax.experimental.shard_map``.
+  * ``make_mesh`` drops the ``axis_types`` kwarg when unsupported (axis types
+    default to Auto there, which is what every caller passes).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["get_abstract_mesh", "set_mesh", "shard_map", "make_mesh",
+           "axis_size", "pcast"]
+
+_NEW_API = hasattr(jax.sharding, "get_abstract_mesh") and hasattr(jax, "set_mesh")
+
+# Contexts entered by the fallback set_mesh, kept open for process lifetime.
+_HELD_CONTEXTS: list = []
+
+
+def _thread_physical_mesh():
+    from jax._src import mesh as _mesh_lib
+
+    env = getattr(_mesh_lib, "thread_resources", None)
+    if env is None:
+        return None
+    phys = env.env.physical_mesh
+    return None if phys.empty else phys
+
+
+def get_abstract_mesh():
+    """Ambient mesh (AbstractMesh or Mesh) or None when none installed."""
+    if _NEW_API:
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as _mesh_lib
+
+    if hasattr(_mesh_lib, "get_abstract_mesh"):
+        am = _mesh_lib.get_abstract_mesh()
+        # 0.4.x returns an empty tuple sentinel when nothing is installed
+        if am is not None and getattr(am, "shape", None):
+            return am
+    return _thread_physical_mesh()
+
+
+def set_mesh(mesh) -> None:
+    """Install `mesh` as the ambient mesh (jax.set_mesh equivalent)."""
+    if _NEW_API:
+        jax.set_mesh(mesh)
+        return
+    from jax._src import mesh as _mesh_lib
+
+    if hasattr(_mesh_lib, "set_abstract_mesh"):
+        ctx = _mesh_lib.set_abstract_mesh(mesh.abstract_mesh)
+        ctx.__enter__()
+        _HELD_CONTEXTS.append(ctx)
+    # Also enter the legacy thread-local mesh context so bare-PartitionSpec
+    # with_sharding_constraint / shard_map resolve the physical mesh.
+    mesh.__enter__()
+    _HELD_CONTEXTS.append(mesh)
+
+
+def shard_map(f, mesh=None, in_specs=None, out_specs=None, **kw):
+    """jax.shard_map, accepting an AbstractMesh on old jax too."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    if mesh is not None and not isinstance(mesh, jax.sharding.Mesh):
+        phys = _thread_physical_mesh()
+        if phys is None:
+            raise ValueError(
+                "shard_map over an AbstractMesh needs an installed physical "
+                "mesh on this jax version (call compat.set_mesh first)")
+        mesh = phys
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
+
+
+def _make_mesh_takes_axis_types() -> bool:
+    import inspect
+
+    return "axis_types" in inspect.signature(jax.make_mesh).parameters
+
+
+_HAS_AXIS_TYPES = _make_mesh_takes_axis_types()
+
+
+def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+    """jax.make_mesh with axis_types dropped when unsupported (0.4.x
+    has no axis_types kwarg; axis types default to Auto there)."""
+    if axis_types is not None and _HAS_AXIS_TYPES:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, **kw)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def axis_size(axis) -> "jax.Array":
+    """jax.lax.axis_size fallback: psum of 1 over the named axis."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis)
+    import jax.numpy as jnp
+
+    return jax.lax.psum(jnp.int32(1), axis)
+
+
+def pcast(x, axes, *, to):
+    """jax.lax.pcast, a no-op on jax versions without varying-axis types."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to=to)
+    return x
+
+
+def axis_type_auto(n: int):
+    """(AxisType.Auto,) * n on jax versions that have axis types, else None."""
+    at = getattr(jax.sharding, "AxisType", None)
+    if at is None:
+        return None
+    return (at.Auto,) * n

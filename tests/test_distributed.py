@@ -15,6 +15,9 @@ import pytest
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 
+# every test here spawns a fresh multi-device jax subprocess
+pytestmark = pytest.mark.slow
+
 
 def run_script(body: str, devices: int = 8, timeout=420):
     env = dict(os.environ)
@@ -41,8 +44,10 @@ SHAPES["tiny"] = dict(seq_len=64, global_batch=8, kind="train")
 cfg = smoke_config("granite-moe-3b-a800m").replace(n_experts_padded=8)
 md = get_model_def(cfg)
 
+from repro.utils import compat
+
 def run(mesh):
-    jax.set_mesh(mesh)
+    compat.set_mesh(mesh)
     step, opt = make_train_step(md, cfg, warmup=1)
     sds, shard = state_specs(md, cfg, mesh)
     params = jax.jit(lambda k: init_params(md.specs(cfg), k),
@@ -102,8 +107,8 @@ import jax, jax.numpy as jnp
 from repro.launch.mesh import make_mesh_for
 from repro.sharding.pipeline import pipeline_forward
 
-mesh = jax.make_mesh((4,), ("pipe",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils import compat
+mesh = compat.make_mesh((4,), ("pipe",), axis_types=compat.axis_type_auto(1))
 S, MB, D = 4, 3, 16
 key = jax.random.PRNGKey(0)
 ws = jax.random.normal(key, (S, D, D)) / D**0.5
@@ -130,8 +135,8 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.sharding.compression import compressed_psum_leaf, compressed_mean_ref
 
-mesh = jax.make_mesh((4,), ("pod",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+from repro.utils import compat
+mesh = compat.make_mesh((4,), ("pod",), axis_types=compat.axis_type_auto(1))
 g = jax.random.normal(jax.random.PRNGKey(0), (4, 64))  # per-pod grads
 errs = jnp.zeros_like(g)
 
@@ -139,8 +144,8 @@ def f(g_local, e_local):
     m, ne = compressed_psum_leaf(g_local[0], e_local[0], "pod")
     return m[None], ne[None]
 
-fn = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
-                            out_specs=(P("pod"), P("pod"))))
+fn = jax.jit(compat.shard_map(f, mesh=mesh, in_specs=(P("pod"), P("pod")),
+                              out_specs=(P("pod"), P("pod"))))
 mean_est, new_err = fn(g, errs)
 ref_mean, ref_err = compressed_mean_ref(g, errs)
 # every pod computed the same mean estimate; matches the reference exactly
@@ -184,8 +189,9 @@ from repro.models.attention import (_camformer_cache_attend,
 from repro.core import bacam, sign_pm1
 from repro.launch.mesh import make_mesh_for
 
+from repro.utils import compat
 mesh = make_mesh_for(4, 2)  # data=2, model=2
-jax.set_mesh(mesh)
+compat.set_mesh(mesh)
 cfg = smoke_config("codeqwen1.5-7b", head_dim=128, n_heads=4,
                    n_kv_heads=2).replace(attn_mode="camformer", k_top=8,
                                          group_size=4, stage1_k=2)

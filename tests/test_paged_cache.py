@@ -1,0 +1,278 @@
+"""Paged bit-packed KV cache: allocator churn, packed-key round-trip,
+fused paged kernel vs oracle, decode-vs-prefill logit consistency, and
+engine equivalence under page pressure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core import bacam
+from repro.core.binarize import sign_pm1
+from repro.core.topk import NEG_INF
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving.engine import Request, ServeEngine
+from repro.serving.kv_cache import TRASH_PAGE, PagedKVCache, pages_for
+
+_IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
+                      and isinstance(x[0], jax.ShapeDtypeStruct))
+
+
+def _zeros(specs):
+    return jax.tree.map(lambda t: jnp.zeros(t[0].shape, t[0].dtype),
+                        specs, is_leaf=_IS_LEAF)
+
+
+def _cam_cfg(**kw):
+    return smoke_config("codeqwen1.5-7b").replace(attn_mode="camformer", **kw)
+
+
+# ---------------------------------------------------------------------------
+# allocator
+
+
+def test_allocator_churn_conserves_pages():
+    rng = np.random.default_rng(0)
+    kv = PagedKVCache(n_pages=33, page_size=16, max_batch=6,
+                      max_pages_per_seq=8)
+    total = kv.free_pages
+    live = {}
+    for it in range(300):
+        slot = int(rng.integers(0, 6))
+        if slot in live and rng.random() < 0.4:
+            kv.release(slot)
+            del live[slot]
+            continue
+        n_tok = int(rng.integers(1, 8 * 16 + 1))
+        need = pages_for(n_tok, 16)
+        have = len(kv.owned(slot))
+        if kv.can_reserve(n_tok, slot):
+            kv.reserve(slot, n_tok)
+            live[slot] = n_tok
+            assert len(kv.owned(slot)) == max(need, have)
+        # invariants after every op
+        owned = [p for s in range(6) for p in kv.owned(s)]
+        assert TRASH_PAGE not in owned  # trash page never handed out
+        assert len(set(owned)) == len(owned)  # no double allocation
+        assert kv.free_pages + len(owned) == total
+        # table rows mirror ownership; unowned entries are trash
+        for s in range(6):
+            o = kv.owned(s)
+            assert list(kv.table[s, :len(o)]) == o
+            assert (kv.table[s, len(o):] == TRASH_PAGE).all()
+    for s in list(live):
+        kv.release(s)
+    assert kv.free_pages == total
+
+
+def test_allocator_reserve_is_idempotent_and_bounded():
+    kv = PagedKVCache(n_pages=5, page_size=8, max_batch=2,
+                      max_pages_per_seq=4)
+    kv.reserve(0, 17)  # 3 pages
+    pages = kv.owned(0)
+    kv.reserve(0, 10)  # shrink request: no-op
+    assert kv.owned(0) == pages
+    assert not kv.can_reserve(8 * 4 + 1)  # check-then-reserve never raises
+    with pytest.raises(ValueError):
+        kv.reserve(0, 8 * 4 + 1)  # beyond max_pages_per_seq
+    kv.reserve(1, 8)
+    with pytest.raises(MemoryError):
+        kv.reserve(1, 8 * 3)  # pool exhausted (4 usable pages)
+
+
+# ---------------------------------------------------------------------------
+# packed-key round-trip through the paged write path
+
+
+def test_paged_write_roundtrips_packed_keys():
+    cfg = _cam_cfg()
+    md = get_model_def(cfg)
+    B, page, n_pages, npseq = 2, 8, 9, 4
+    pools = _zeros(md.page_specs(cfg, n_pages, page, B))
+    kv = PagedKVCache(n_pages, page, B, npseq)
+    lens = [13, 5]
+    for b in range(B):
+        kv.reserve(b, lens[b])
+    pt = jnp.asarray(kv.table)
+
+    from repro.models.attention import _paged_write
+    hkv, d = cfg.n_kv_heads, cfg.head_dim
+    s = 16
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, hkv, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, hkv, s, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (B, s))
+    layer0 = jax.tree.map(lambda a: a[0], pools)
+    new = _paged_write(layer0, k, v, pos, pt, jnp.asarray(lens, jnp.int32),
+                       cfg)
+
+    want = bacam.pack_bits(sign_pm1(k))  # (B, hkv, s, W) — binarize layout
+    got = kref.paged_gather_ref(new["kp_pages"], pt)  # (B, hkv, NP*page, W)
+    gotv = kref.paged_gather_ref(new["v_pages"], pt)
+    for b in range(B):
+        n = lens[b]
+        assert jnp.array_equal(got[b, :, :n], want[b, :, :n]), b
+        assert jnp.allclose(gotv[b, :, :n], v[b, :, :n]), b
+    # per-slot k_scale == mean |k| over the VALID tokens only
+    for b in range(B):
+        ref = jnp.mean(jnp.abs(k[b, :, :lens[b]]), axis=(1, 2))
+        assert jnp.allclose(new["k_scale"][b], ref, atol=1e-6), b
+
+
+# ---------------------------------------------------------------------------
+# fused paged kernel vs jnp oracle
+
+
+@pytest.mark.parametrize("window", [None, 20])
+def test_paged_topk_kernel_matches_oracle(window):
+    rng = np.random.default_rng(3)
+    B, HKV, R, d, page, P, NP = 3, 2, 4, 64, 32, 20, 4
+    W = d // 32
+    qp = jnp.asarray(rng.integers(0, 2**32, (B, HKV, R, W), dtype=np.uint32))
+    kp = jnp.asarray(rng.integers(0, 2**32, (P, HKV, page, W),
+                                  dtype=np.uint32))
+    pt = jnp.asarray(
+        rng.permutation(P - 1)[:B * NP].reshape(B, NP) + 1, jnp.int32)
+    kvl = jnp.asarray([1, 37, NP * page], jnp.int32)
+    # default decode tail AND an explicit mid-sequence query position
+    for qpos in (None, jnp.asarray([0, 11, 60], jnp.int32)):
+        args = (qp, kp, pt, kvl) if qpos is None else (qp, kp, pt, kvl, qpos)
+        v, i = kops.bacam_paged_scores_topk(
+            *args, d=d, group=16, stage1_k=2, window=window)
+        rv, ri = kref.bacam_paged_topk_ref(
+            qp, kp, pt, kvl, d, q_pos=qpos, group_size=16, stage1_k=2,
+            window=window)
+        rvf = jnp.where(rv <= kref.MASKED_SCORE // 2, NEG_INF,
+                        rv.astype(jnp.float32))
+        assert jnp.array_equal(v, rvf)
+        valid = rvf > NEG_INF / 2
+        assert jnp.array_equal(jnp.where(valid, i, 0),
+                               jnp.where(valid, ri, 0))
+
+
+# ---------------------------------------------------------------------------
+# decode-vs-prefill logit consistency (camformer mode, paged cache)
+
+
+@pytest.mark.parametrize("chunk,plen", [(0, 9), (4, 8)])
+def test_paged_decode_consistent_with_prefill(chunk, plen):
+    """Decode of the last prompt token == one-shot prefill logits, for
+    both the whole-prompt and the chunked (lax.scan) prefill branch."""
+    cfg = _cam_cfg(prefill_chunk=chunk)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    prompt = list(map(int,
+                      np.random.default_rng(5).integers(0, cfg.vocab, plen)))
+    page, n_pages = 8, 9
+
+    def fresh():
+        pools = _zeros(md.page_specs(cfg, n_pages, page, 1))
+        kv = PagedKVCache(n_pages, page, 1, 4)
+        kv.reserve(0, len(prompt) + 2)
+        return pools, jnp.asarray(kv.table)
+
+    # one-shot prefill of the whole prompt
+    pools, pt = fresh()
+    full, _ = md.prefill_paged(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None],
+                 "lens": jnp.asarray([len(prompt)], jnp.int32)},
+        pools, pt, cfg)
+    # prefill of prompt[:-1], then decode prompt[-1] at its position
+    pools, pt = fresh()
+    _, pools = md.prefill_paged(
+        params, {"tokens": jnp.asarray(prompt[:-1], jnp.int32)[None],
+                 "lens": jnp.asarray([len(prompt) - 1], jnp.int32)},
+        pools, pt, cfg)
+    stepped, _ = md.decode_paged(
+        params, jnp.asarray([prompt[-1]], jnp.int32),
+        jnp.asarray([len(prompt) - 1], jnp.int32),
+        jnp.asarray([len(prompt)], jnp.int32), pools, pt, cfg)
+    # same tolerance as the seed's dense decode-vs-prefill test (bf16 noise)
+    assert float(jnp.abs(full - stepped).max()) < 2e-2
+
+
+@pytest.mark.slow
+def test_paged_engine_matches_dense_cache_reference():
+    """Greedy generations through the paged engine (slot churn, batched
+    prefill, fused paged decode) == the contiguous dense-cache camformer
+    path driven one request at a time."""
+    cfg = _cam_cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    prompts = [[5, 9, 2], [7, 7, 1, 3, 8, 2, 4], [11, 4], [1, 2, 3, 4, 5]]
+    new = 6
+
+    # reference: seed dense-cache camformer prefill/decode, batch of one
+    def reference(p):
+        dc = _zeros(md.cache_specs(cfg, 1, 64))
+        logits, dc = md.prefill(
+            params, {"tokens": jnp.asarray(p, jnp.int32)[None]}, dc, cfg)
+        toks = [int(jnp.argmax(logits[0]))]
+        pos = len(p)
+        for _ in range(new - 1):
+            logits, dc = md.decode(
+                params, jnp.asarray([toks[-1]], jnp.int32),
+                jnp.asarray([pos], jnp.int32),
+                jnp.asarray([pos + 1], jnp.int32), dc, cfg)
+            toks.append(int(jnp.argmax(logits[0])))
+            pos += 1
+        return toks
+
+    want = {i: reference(p) for i, p in enumerate(prompts)}
+
+    # paged engine with 3 slots (forces slot reuse) and a page pool sized
+    # to HALF full residency (forces admission backpressure via pages)
+    eng = ServeEngine(md, cfg, params, max_batch=3, max_len=64, page_size=8,
+                      n_pages=1 + 3 * 4)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(prompt=list(p), max_new_tokens=new, rid=i))
+    done = eng.run()
+    got = {r.rid: r.tokens for r in done}
+    assert got == want
+    assert eng.kv.free_pages == eng.kv.n_pages - 1  # everything released
+
+
+def test_paged_engine_page_pressure_queues_and_completes():
+    # chunked prefill on (prompts longer than the chunk hit the scan path)
+    cfg = _cam_cfg(prefill_chunk=8)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    # pool of 4 usable pages x 8 tokens; requests need 2-3 pages ->
+    # only a subset of the 4 requests can be resident at once
+    eng = ServeEngine(md, cfg, params, max_batch=4, max_len=32, page_size=8,
+                      n_pages=5)
+    prompts = [[3, 5, 8, 1], [4, 5, 8, 1],
+               [5, 5, 8, 1, 9, 2, 7, 7, 3, 1],  # > chunk: chunked prefill
+               [6, 5, 8, 1]]
+    for i, p in enumerate(prompts):
+        eng.submit(Request(prompt=p, max_new_tokens=8, rid=i))
+    done = eng.run()
+    assert len(done) == 4
+    assert all(len(r.tokens) == 8 for r in done)
+    assert eng.kv.free_pages == 4
+
+
+def test_paged_engine_single_token_request():
+    cfg = _cam_cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32, page_size=8)
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=1, rid=0))
+    with pytest.raises(ValueError):
+        eng.submit(Request(prompt=[], max_new_tokens=4, rid=1))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].tokens) == 1  # exactly max_new
+
+
+def test_paged_engine_oversized_request_raises():
+    cfg = _cam_cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8,
+                      n_pages=3)  # 2 usable pages = 16 tokens
+    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=30, rid=0))
+    with pytest.raises(MemoryError):
+        eng.run()

@@ -3,6 +3,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (binary_scores_exact, pack_bits, sign_pm1,
@@ -105,12 +108,11 @@ def test_compression_error_feedback_unbiased_over_time(seed, n):
 ]))
 @SETTINGS
 def test_resolve_spec_divisibility(case):
-    import jax as _jax
+    from repro.launch.mesh import make_mesh_for
     from repro.sharding.partitioning import CACHE_RULES
 
     axes, shape = case
-    mesh = _jax.make_mesh((1, 1), ("data", "model"),
-                          axis_types=(_jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh_for(1, 1)
     # trivially valid on a 1x1 mesh
     spec = resolve_spec(axes, shape, mesh, CACHE_RULES)
     assert len(spec) == len(shape)

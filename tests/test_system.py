@@ -32,6 +32,7 @@ def _mk_trainer(tmp_path, steps=8, arch="codeqwen1.5-7b"):
     return Trainer(md, cfg, mesh, data, tcfg), cfg, md, mesh
 
 
+@pytest.mark.slow
 def test_trainer_loss_decreases_and_checkpoints(tmp_path):
     trainer, *_ = _mk_trainer(tmp_path, steps=12)
     trainer.run()
@@ -40,6 +41,7 @@ def test_trainer_loss_decreases_and_checkpoints(tmp_path):
     assert latest_step(trainer.tcfg.ckpt_dir) == 12
 
 
+@pytest.mark.slow
 def test_trainer_resume_continues_from_checkpoint(tmp_path):
     trainer, *_ = _mk_trainer(tmp_path, steps=8)
     trainer.run()
@@ -50,6 +52,7 @@ def test_trainer_resume_continues_from_checkpoint(tmp_path):
     assert latest_step(trainer2.tcfg.ckpt_dir) == 12
 
 
+@pytest.mark.slow
 def test_trainer_nan_rollback(tmp_path):
     trainer, *_ = _mk_trainer(tmp_path, steps=8)
     trainer.run()
@@ -90,6 +93,7 @@ def test_checkpoint_atomic_and_keep_n(tmp_path):
     assert not any(n.startswith("tmp_") for n in os.listdir(d))
 
 
+@pytest.mark.slow
 def test_serving_engine_continuous_batching_consistency():
     """Batched engine output == one-request-at-a-time output (greedy)."""
     cfg = smoke_config("codeqwen1.5-7b")
@@ -109,6 +113,7 @@ def test_serving_engine_continuous_batching_consistency():
     assert solo == batched
 
 
+@pytest.mark.slow
 def test_serving_engine_camformer_mode():
     cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode="camformer")
     md = get_model_def(cfg)
