@@ -1,27 +1,37 @@
-"""Serving-engine paged decode micro-benchmark.
+"""Serving-engine paged decode micro-benchmark, swept over backends.
 
-Times one continuous-batching decode tick (fused paged CAM kernel, all
-slots active) and the batched prefill, on the smoke config — fast enough
-for CI (`run.py --smoke`), and a regression canary for the decode hot
-path's dispatch overhead.
+Times one continuous-batching decode tick (all slots active) and reports
+decode ticks/s plus KV-cache bytes/token for each attention backend's
+page layout — dense bf16 pages vs camformer bit-packed pages — as a
+comparison table.  Fast enough for CI (`run.py --smoke`), and a
+regression canary for the decode hot path's dispatch overhead.
+
+Standalone:
+
+    PYTHONPATH=src:. python benchmarks/paged_decode.py \
+        [--backend dense,camformer] [--max-batch 4] [--max-new 8]
 """
 
+import argparse
 import time
 
 import jax
 
 from repro.configs import smoke_config
+from repro.core.backend import get_backend
 from repro.models import get_model_def
 from repro.models.module import init_params
 from repro.serving.engine import Request, ServeEngine
 
 
-def run(csv_rows, *, max_batch=4, max_new=8):
-    cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode="camformer")
+def bench_backend(backend: str, *, max_batch=4, max_new=8, page_size=16,
+                  max_len=64):
+    """One engine run on the smoke config; returns the metrics row."""
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend=backend)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(md, cfg, params, max_batch=max_batch, max_len=64,
-                      page_size=16)
+    eng = ServeEngine(md, cfg, params, max_batch=max_batch, max_len=max_len,
+                      page_size=page_size)
     for i in range(max_batch):
         eng.submit(Request(prompt=[3 + i, 5, 8, 1], max_new_tokens=max_new,
                            rid=i))
@@ -33,9 +43,58 @@ def run(csv_rows, *, max_batch=4, max_new=8):
     while eng.step():
         ticks += 1
     dt = (time.perf_counter() - t0) / max(ticks, 1) * 1e6
-    print("\n== paged decode: one engine tick "
-          f"(B={max_batch}, fused paged CAM kernel) ==")
-    print(f"  {dt:9.1f} us/tick  ({dt / max_batch:8.1f} us/token)  "
-          f"pool {resident}/{eng.kv.n_pages - 1} pages resident")
-    csv_rows.append(("paged_decode_tick", dt, f"B={max_batch} us/tick"))
+    from repro.models.transformer import dtype_of
+
+    bytes_tok = (get_backend(backend).cache_bytes_per_token(cfg, dtype_of(cfg))
+                 * cfg.n_layers)
+    return {
+        "backend": backend,
+        "us_per_tick": dt,
+        "us_per_token": dt / max_batch,
+        "ticks_per_s": 1e6 / dt,
+        "kv_bytes_per_token": bytes_tok,
+        "resident_pages": resident,
+        "pool_pages": eng.kv.n_pages - 1,
+    }
+
+
+def run(csv_rows, *, max_batch=4, max_new=8, backends=("dense", "camformer")):
+    rows = [bench_backend(b, max_batch=max_batch, max_new=max_new)
+            for b in backends]
+    print(f"\n== paged decode: one engine tick per backend "
+          f"(B={max_batch}, shared paged serving path) ==")
+    print(f"  {'backend':10s} {'us/tick':>10s} {'us/token':>10s} "
+          f"{'ticks/s':>10s} {'KV B/token':>11s} {'pages':>9s}")
+    for r in rows:
+        print(f"  {r['backend']:10s} {r['us_per_tick']:10.1f} "
+              f"{r['us_per_token']:10.1f} {r['ticks_per_s']:10.1f} "
+              f"{r['kv_bytes_per_token']:11.0f} "
+              f"{r['resident_pages']:>4d}/{r['pool_pages']}")
+    if len(rows) > 1:
+        base = rows[0]
+        for r in rows[1:]:
+            print(f"  {r['backend']} vs {base['backend']}: "
+                  f"{base['us_per_tick'] / r['us_per_tick']:.2f}x tick speed, "
+                  f"{base['kv_bytes_per_token'] / r['kv_bytes_per_token']:.2f}x"
+                  f" KV bytes/token")
+    for r in rows:
+        csv_rows.append((f"paged_decode_tick_{r['backend']}",
+                         r["us_per_tick"], f"B={max_batch} us/tick"))
+        csv_rows.append((f"paged_kv_bytes_per_token_{r['backend']}",
+                         r["kv_bytes_per_token"], "bytes/token all layers"))
     return csv_rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="dense,camformer",
+                    help="comma-separated backend sweep")
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    args = ap.parse_args()
+    run([], max_batch=args.max_batch, max_new=args.max_new,
+        backends=tuple(args.backend.split(",")))
+
+
+if __name__ == "__main__":
+    main()

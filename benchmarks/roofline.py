@@ -37,7 +37,8 @@ def run(csv_rows):
         for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
             roof = r["roofline"]
             gb = r["memory"]["per_device_total"] / 2**30
-            mode = r["attn_mode"] + ("+" + r["tag"] if r.get("tag") else "")
+            mode = (r.get("backend") or r.get("attn_mode", "?")) + (
+                "+" + r["tag"] if r.get("tag") else "")
             print(f"{r['arch']:24s} {r['shape']:12s} {mode:16s} "
                   f"{roof['compute_s']:9.2e} {roof['memory_s']:9.2e} "
                   f"{roof['collective_s']:9.2e} {roof['dominant']:>10s} "

@@ -1,27 +1,38 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV at the end (scaffold contract);
-human-readable tables above it.
+human-readable tables above it.  ``--json PATH`` additionally writes the
+rows as JSON (the CI bench-smoke lane uploads one ``BENCH_<backend>.json``
+per attention backend so the perf trajectory accumulates as artifacts).
 
 ``--smoke`` runs the CI-sized subset: analytic energy numbers, the
 roofline report (no-op without dry-run artifacts), and the paged-decode
-engine tick — no training loops or large host-timed attention sweeps.
+engine tick per backend — no training loops or large host-timed attention
+sweeps.  ``--backend`` narrows the paged-decode sweep to one backend.
 """
 
 import argparse
+import json
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI subset (no training / large sweeps)")
+    ap.add_argument("--backend", default=None,
+                    help="restrict the paged-decode sweep to one backend "
+                         "(default: dense,camformer comparison)")
+    ap.add_argument("--json", default=None,
+                    help="also write the CSV rows to this JSON file")
     args = ap.parse_args()
 
+    backends = (tuple(args.backend.split(",")) if args.backend
+                else ("dense", "camformer"))
     csv_rows = []
     from benchmarks import fig5_energy, paged_decode, roofline
 
     csv_rows = fig5_energy.run(csv_rows)
-    csv_rows = paged_decode.run(csv_rows)
+    csv_rows = paged_decode.run(csv_rows, backends=backends)
     csv_rows = roofline.run(csv_rows)
     if not args.smoke:
         from benchmarks import table2_perf, table34_accuracy
@@ -32,6 +43,11 @@ def main() -> None:
     print("\nname,us_per_call,derived")
     for name, val, derived in csv_rows:
         print(f"{name},{val},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([{"name": n, "us_per_call": v, "derived": d}
+                       for n, v, d in csv_rows], f, indent=2, default=float)
+        print(f"wrote {args.json} ({len(csv_rows)} rows)")
 
 
 if __name__ == '__main__':

@@ -14,8 +14,16 @@ from repro.models.module import init_params
 from repro.serving.engine import Request, ServeEngine
 
 
-def run(mode: str):
-    cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode=mode)
+LAYOUTS = {
+    "dense": "dense bf16 K/V pages",
+    "binary": "dense bf16 K/V pages (HAD-binarized scoring)",
+    "camformer": "packed binary K pages (6.25% of bf16) + top-32 sparse V",
+}
+
+
+def run(backend: str, layer_backends=None):
+    cfg = smoke_config("codeqwen1.5-7b").replace(
+        attn_backend=backend, layer_backends=layer_backends)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=4, max_len=96)
@@ -27,9 +35,12 @@ def run(mode: str):
     done = eng.run()
     dt = time.perf_counter() - t0
     toks = sum(len(r.tokens) for r in done)
-    print(f"[{mode:9s}] {len(done)} requests, {toks} tokens in {dt:.2f}s "
-          f"({toks/dt:.1f} tok/s); cache layout: "
-          f"{'packed binary K (6.25% of bf16) + top-32 sparse V' if mode == 'camformer' else 'dense bf16 K/V'}")
+    label = ",".join(layer_backends) if layer_backends else backend
+    layout = (" / ".join(LAYOUTS.get(b, b)
+                         for b in dict.fromkeys(cfg.backend_names))
+              if layer_backends else LAYOUTS.get(backend, backend))
+    print(f"[{label:15s}] {len(done)} requests, {toks} tokens in {dt:.2f}s "
+          f"({toks/dt:.1f} tok/s); page layout: {layout}")
     for r in sorted(done, key=lambda r: r.rid)[:3]:
         print(f"   req {r.rid}: {r.prompt} -> {r.tokens}")
 
@@ -37,3 +48,5 @@ def run(mode: str):
 if __name__ == "__main__":
     run("dense")
     run("camformer")
+    # per-layer policy: both page layouts live in the same pool
+    run("dense", layer_backends=("dense", "camformer"))

@@ -41,15 +41,14 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--tiny", action="store_true")
-    ap.add_argument("--attn-mode", default="dense",
-                    choices=["dense", "binary", "camformer"])
+    from repro.launch.cli import add_backend_args, apply_backend_args
+    add_backend_args(ap, choices=["dense", "binary", "camformer"])
     ap.add_argument("--seq", type=int, default=0)
     ap.add_argument("--batch", type=int, default=0)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
     args = ap.parse_args()
 
-    cfg = (lm_tiny() if args.tiny else lm_100m()).replace(
-        attn_mode=args.attn_mode)
+    cfg = apply_backend_args(lm_tiny() if args.tiny else lm_100m(), args)
     seq = args.seq or (128 if args.tiny else 1024)
     batch = args.batch or (8 if args.tiny else 64)
     SHAPES["e2e"] = dict(seq_len=seq, global_batch=batch, kind="train")
@@ -59,7 +58,8 @@ def main():
     from repro.models.module import count_params
 
     print(f"model: {cfg.name}  params={count_params(md.specs(cfg)):,}  "
-          f"attn={cfg.attn_mode}  seq={seq} batch={batch}")
+          f"attn={cfg.uniform_backend or ','.join(cfg.backend_names)}  "
+          f"seq={seq} batch={batch}")
     data = SyntheticLMData(cfg, "e2e", mesh)
     tcfg = TrainerConfig(total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
                          log_every=max(1, args.steps // 15),

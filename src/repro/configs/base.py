@@ -26,7 +26,18 @@ class ModelConfig:
     vocab: int
 
     # --- attention / CAMformer integration (first-class feature) ---
-    attn_mode: str = "dense"  # dense | binary | camformer
+    # attn_mode is the DEPRECATED seed-era spelling, kept as an alias:
+    # setting it alongside a DIFFERENT attn_backend is an error (silent
+    # precedence would make ablation replace(attn_mode=...) calls no-ops);
+    # use cfg.backend_for(layer) to resolve.
+    attn_mode: Optional[str] = None  # dense | binary | camformer (alias)
+    # Canonical backend selection (core/backend.py registry names).
+    attn_backend: Optional[str] = None
+    # Per-layer backend policy: layer i runs layer_backends[i % len] —
+    # hybrid models can mix realizations (e.g. sliding-window layers on
+    # "dense", full-attention layers on "camformer").  Overrides
+    # attn_backend/attn_mode when set.
+    layer_backends: Optional[Tuple[str, ...]] = None
     k_top: int = 32
     group_size: int = 16
     stage1_k: int = 2
@@ -76,6 +87,55 @@ class ModelConfig:
     param_dtype: str = "float32"
     scan_layers: bool = True
     remat: str = "full"  # full | none
+
+    def __post_init__(self):
+        if self.layer_backends is not None and not self.layer_backends:
+            raise ValueError("layer_backends must be a non-empty tuple or "
+                             "None (= uniform attn_backend)")
+        if (self.attn_mode and self.attn_backend
+                and self.attn_mode != self.attn_backend):
+            raise ValueError(
+                f"conflicting attn_mode={self.attn_mode!r} (deprecated "
+                f"alias) and attn_backend={self.attn_backend!r}; set only "
+                "attn_backend")
+
+    # --- attention-backend resolution (the deprecation shim: every
+    # consumer goes through these accessors; nothing outside this file
+    # reads attn_mode) ---
+    @property
+    def backend(self) -> str:
+        """Resolved default backend name (attn_backend, falling back to
+        the deprecated attn_mode alias).  A genuinely mixed layer policy
+        has no single backend: consumers that cannot thread
+        backend_for(layer) (encdec/rglru stacks, dry-run cells) must fail
+        loudly rather than silently run every layer on the default."""
+        if self.layer_backends:
+            uniform = self.uniform_backend
+            if uniform is None:
+                raise ValueError(
+                    "config has a mixed layer_backends policy "
+                    f"{self.layer_backends}; use backend_for(layer) / "
+                    "backend_names")
+            return uniform
+        return self.attn_backend or self.attn_mode or "dense"
+
+    def backend_for(self, layer: int) -> str:
+        """Typed accessor: the backend name of one layer (per-layer
+        policy cycles layer_backends over the stack, like layer_pattern)."""
+        if self.layer_backends:
+            return self.layer_backends[layer % len(self.layer_backends)]
+        return self.backend
+
+    @property
+    def backend_names(self) -> Tuple[str, ...]:
+        """Backend name per layer, length n_layers."""
+        return tuple(self.backend_for(i) for i in range(self.n_layers))
+
+    @property
+    def uniform_backend(self) -> Optional[str]:
+        """The single backend name if every layer agrees, else None."""
+        names = set(self.backend_names)
+        return names.pop() if len(names) == 1 else None
 
     @property
     def padded_experts(self) -> int:

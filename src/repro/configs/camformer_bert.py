@@ -13,7 +13,7 @@ CONFIG = register(ModelConfig(
     head_dim=64,
     d_ff=4096,
     vocab=30522,
-    attn_mode="camformer",
+    attn_backend="camformer",
     k_top=32,
     group_size=16,
     stage1_k=2,

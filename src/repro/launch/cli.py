@@ -1,0 +1,49 @@
+"""Shared CLI plumbing for the launch drivers.
+
+Backend selection is one flag set across serve/train/dryrun: ``--backend``
+(a core/backend.py registry name) plus ``--layer-backends`` for the
+per-layer policy; ``--attn-mode`` is kept as a deprecated alias that maps
+onto ``--backend`` with a note.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+__all__ = ["add_backend_args", "apply_backend_args", "resolve_backend_arg"]
+
+
+def add_backend_args(ap: argparse.ArgumentParser, *, choices=None,
+                     layer_policy: bool = True):
+    ap.add_argument("--backend", default=None, choices=choices,
+                    help="attention backend (core/backend.py registry: "
+                         "dense | binary | camformer)")
+    ap.add_argument("--attn-mode", default=None, choices=choices,
+                    help="DEPRECATED: old spelling of --backend")
+    if layer_policy:
+        ap.add_argument("--layer-backends", default=None,
+                        help="comma-separated per-layer backend policy, "
+                             "cycled over the stack (e.g. dense,camformer)")
+
+
+def resolve_backend_arg(args) -> str | None:
+    """The requested backend name, honoring the deprecated alias."""
+    if args.attn_mode:
+        if args.backend and args.backend != args.attn_mode:
+            print(f"note: --attn-mode {args.attn_mode} is deprecated and "
+                  f"IGNORED in favor of --backend {args.backend}")
+            return args.backend
+        print("note: --attn-mode is deprecated; use --backend "
+              f"(treating as --backend {args.attn_mode})")
+        return args.attn_mode
+    return args.backend
+
+
+def apply_backend_args(cfg, args):
+    backend = resolve_backend_arg(args)
+    if backend:
+        cfg = cfg.replace(attn_backend=backend)
+    if getattr(args, "layer_backends", None):
+        cfg = cfg.replace(
+            layer_backends=tuple(args.layer_backends.split(",")))
+    return cfg

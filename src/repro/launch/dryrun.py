@@ -48,7 +48,7 @@ RESULTS_DIR = os.path.join(os.path.dirname(__file__), "../../../results/dryrun")
 ATTENTION_FAMILIES = ("dense", "moe", "vlm", "audio")
 
 
-def effective_config(arch: str, shape: str, attn_mode: str | None,
+def effective_config(arch: str, shape: str, backend: str | None,
                      dist_topk: bool = False, prefill_chunk: int = 0):
     cfg = get_config(arch)
     if dist_topk:
@@ -56,19 +56,19 @@ def effective_config(arch: str, shape: str, attn_mode: str | None,
     if prefill_chunk:
         cfg = cfg.replace(prefill_chunk=prefill_chunk)
     note = ""
-    if attn_mode:
-        cfg = cfg.replace(attn_mode=attn_mode)
-        note = f"attn_mode={attn_mode} (CLI)"
+    if backend:
+        cfg = cfg.replace(attn_backend=backend)
+        note = f"backend={backend} (CLI)"
     elif shape == "long_500k" and cfg.family in ATTENTION_FAMILIES:
-        cfg = cfg.replace(attn_mode="camformer")
+        cfg = cfg.replace(attn_backend="camformer")
         note = ("dense long_500k skipped (full attention); run with "
                 "CAMformer binary top-k cache per paper Sec. IV-C")
     return cfg, note
 
 
-def build_cell(arch: str, shape: str, mesh, attn_mode: str | None,
+def build_cell(arch: str, shape: str, mesh, backend: str | None,
                dist_topk: bool = False, prefill_chunk: int = 0):
-    cfg, note = effective_config(arch, shape, attn_mode, dist_topk,
+    cfg, note = effective_config(arch, shape, backend, dist_topk,
                                  prefill_chunk)
     md = get_model_def(cfg)
     kind = SHAPES[shape]["kind"]
@@ -126,13 +126,13 @@ def build_cell(arch: str, shape: str, mesh, attn_mode: str | None,
     return cfg, md, fn, args, n_params, note
 
 
-def run_cell(arch: str, shape: str, *, multi_pod: bool, attn_mode=None,
+def run_cell(arch: str, shape: str, *, multi_pod: bool, backend=None,
              out_dir=RESULTS_DIR, tag="", dist_topk=False, prefill_chunk=0):
     mesh = make_production_mesh(multi_pod=multi_pod)
     chips = mesh.size
     t0 = time.time()
     cfg, md, fn, args, n_params, note = build_cell(arch, shape, mesh,
-                                                   attn_mode, dist_topk,
+                                                   backend, dist_topk,
                                                    prefill_chunk)
     from repro.utils import compat
 
@@ -156,7 +156,8 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, attn_mode=None,
     rec = {
         "arch": arch, "shape": shape, "kind": SHAPES[shape]["kind"],
         "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-        "attn_mode": cfg.attn_mode, "note": note, "tag": tag,
+        "backend": cfg.backend, "attn_mode": cfg.backend,  # legacy key
+        "note": note, "tag": tag,
         "profile": __import__("repro.sharding.partitioning",
                               fromlist=["x"]).get_parallelism_profile(),
         "n_params": n_params,
@@ -199,8 +200,9 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES))
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--attn-mode", default=None,
-                    choices=[None, "dense", "binary", "camformer"])
+    from repro.launch.cli import add_backend_args, resolve_backend_arg
+    add_backend_args(ap, choices=[None, "dense", "binary", "camformer"],
+                     layer_policy=False)  # scan-compiled cells are uniform
     ap.add_argument("--tag", default="")
     ap.add_argument("--profile", default="tp", choices=["tp", "dp"],
                     help="sharding profile (see sharding/partitioning.py)")
@@ -216,18 +218,19 @@ def main():
     from repro.sharding.partitioning import set_parallelism_profile
     set_parallelism_profile(args.profile)
 
+    backend = resolve_backend_arg(args)
     if args.all:
         for arch in ASSIGNED_ARCHS:
             for shape in SHAPES:
                 try:
                     run_cell(arch, shape, multi_pod=args.multi_pod,
-                             attn_mode=args.attn_mode, out_dir=args.out_dir,
+                             backend=backend, out_dir=args.out_dir,
                              tag=args.tag)
                 except Exception as e:  # noqa: BLE001 — report and continue
                     print(f"[{arch} x {shape}] FAILED: {type(e).__name__}: {e}")
         return
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
-             attn_mode=args.attn_mode, out_dir=args.out_dir, tag=args.tag,
+             backend=backend, out_dir=args.out_dir, tag=args.tag,
              dist_topk=args.dist_topk, prefill_chunk=args.prefill_chunk)
 
 

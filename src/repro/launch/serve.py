@@ -1,7 +1,8 @@
 """Serving driver: batched decode with continuous batching.
 
     PYTHONPATH=src python -m repro.launch.serve --arch camformer-bert --smoke \
-        --requests 12 --max-new 24 [--attn-mode camformer]
+        --requests 12 --max-new 24 [--backend camformer] \
+        [--layer-backends dense,camformer]
 """
 
 import argparse
@@ -9,6 +10,7 @@ import argparse
 import jax
 
 from repro.configs import get_config, smoke_config
+from repro.launch.cli import add_backend_args, apply_backend_args
 from repro.models import get_model_def
 from repro.models.module import init_params
 from repro.serving.engine import Request, ServeEngine
@@ -18,7 +20,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--attn-mode", default=None)
+    add_backend_args(ap)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
@@ -32,8 +34,7 @@ def main():
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.attn_mode:
-        cfg = cfg.replace(attn_mode=args.attn_mode)
+    cfg = apply_backend_args(cfg, args)
     if args.prefill_chunk is not None:
         cfg = cfg.replace(prefill_chunk=args.prefill_chunk)
     md = get_model_def(cfg)
@@ -41,10 +42,10 @@ def main():
     eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, page_size=args.page_size,
                       n_pages=args.n_pages)
-    if eng.paged:
-        print(f"paged KV cache: {eng.kv.n_pages} pages x "
-              f"{eng.kv.page_size} tokens "
-              f"(packed keys, page table {eng.kv.table.shape})")
+    layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
+    print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
+          f"{eng.kv.page_size} tokens "
+          f"(page table {eng.kv.table.shape})")
     rng = jax.random.PRNGKey(7)
     for i in range(args.requests):
         rng, sub = jax.random.split(rng)

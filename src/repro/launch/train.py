@@ -45,12 +45,12 @@ def main():
     ap.add_argument("--model-parallel", type=int, default=1)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--attn-mode", default=None)
+    from repro.launch.cli import add_backend_args, apply_backend_args
+    add_backend_args(ap)
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
-    if args.attn_mode:
-        cfg = cfg.replace(attn_mode=args.attn_mode)
+    cfg = apply_backend_args(cfg, args)
     if args.production_mesh:
         mesh = make_production_mesh(multi_pod=args.multi_pod)
     else:

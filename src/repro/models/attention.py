@@ -1,16 +1,22 @@
-"""Model-level attention block: projections, RoPE, KV cache, CAMformer modes.
+"""Model-level attention block: projections, RoPE, sharding strategy, and
+dispatch to a pluggable ``AttentionBackend`` (core/backend.py).
 
-The KV cache comes in two layouts (first-class CAMformer integration):
+The block owns everything physical-realization-*independent* — QKV
+projections, RoPE, GQA head layout, the mesh-aware sharding strategy —
+and hands the realization itself (cache layout, scoring arithmetic, paged
+pools, fused kernels) to the layer's backend:
 
-  * dense:     k, v in model dtype (B, H_kv, S, D)            — baseline.
-  * camformer: k stored BIT-PACKED (B, H_kv, S, D/32) uint32  — the paper's
-               Key SRAM holds binarized keys; 6.25% of the BF16 footprint
-               (Sec. III-C1).  v stays bf16 (1/1/16 of Table II).  A running
-               per-head key scale rides along for the softmax temperature.
+  * dense:     bf16 K/V caches & pages, softmax attention — baseline.
+  * binary:    dense storage, HAD-binarized scoring, full softmax.
+  * camformer: keys stored BIT-PACKED (B, H_kv, S, D/32) uint32 — the
+               paper's Key SRAM holds binarized keys; 6.25% of the BF16
+               footprint (Sec. III-C1).  v stays bf16 (1/1/16 of
+               Table II).  A running per-head key scale rides along for
+               the softmax temperature.
 
-Decode against the packed cache performs the paper's "CAM search over a
-growing KV cache": Hamming scores via popcount (Pallas kernel for long
-caches), two-stage top-k, softmax over 32 survivors, sparse V gather.
+Per-layer policy: callers pass ``backend=`` (resolved by the model from
+``cfg.backend_for(layer)``); without it the block uses the config's
+uniform backend.
 """
 
 from __future__ import annotations
@@ -18,31 +24,21 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import bacam
-from repro.core.attention import (AttentionSpec, attention,
-                                  camformer_paged_attention,
-                                  topk_softmax_weights)
-from repro.core.binarize import sign_pm1
-from repro.core.topk import NEG_INF, two_stage_topk
+from repro.core.backend import AttentionBackend, get_backend
 from repro.models.layers import rope
 from repro.models.module import Param
 from repro.sharding.partitioning import constrain
 from repro.utils import compat
 
 __all__ = [
-    "attn_specs", "attn_cache_spec", "attn_page_spec", "attention_block",
-    "spec_from_cfg",
+    "attn_specs", "attn_cache_spec", "attention_block",
 ]
 
 
-def spec_from_cfg(cfg) -> AttentionSpec:
-    return AttentionSpec(
-        mode=cfg.attn_mode,
-        k_top=cfg.k_top,
-        group_size=cfg.group_size,
-        stage1_k=cfg.stage1_k,
-        use_kernel=cfg.use_kernel,
-    )
+def _resolve_backend(cfg, backend=None) -> AttentionBackend:
+    if isinstance(backend, AttentionBackend):
+        return backend
+    return get_backend(backend or cfg.backend)
 
 
 def attn_specs(cfg, cross: bool = False):
@@ -60,88 +56,11 @@ def attn_specs(cfg, cross: bool = False):
     return s
 
 
-def attn_cache_spec(cfg, batch: int, cache_len: int, dtype):
-    """ShapeDtypeStructs + logical axes for one layer's self-attn cache."""
-    hkv, d = cfg.n_kv_heads, cfg.head_dim
-    if cfg.attn_mode == "camformer":
-        return {
-            "k_packed": (jax.ShapeDtypeStruct((batch, hkv, cache_len, d // 32), jnp.uint32),
-                         ("batch", "kv_heads", "kv_seq", None)),
-            "v": (jax.ShapeDtypeStruct((batch, hkv, cache_len, d), dtype),
-                  ("batch", "kv_heads", "kv_seq", "head_dim")),
-            "k_scale": (jax.ShapeDtypeStruct((batch, hkv), jnp.float32),
-                        ("batch", "kv_heads")),
-        }
-    return {
-        "k": (jax.ShapeDtypeStruct((batch, hkv, cache_len, d), dtype),
-              ("batch", "kv_heads", "kv_seq", "head_dim")),
-        "v": (jax.ShapeDtypeStruct((batch, hkv, cache_len, d), dtype),
-              ("batch", "kv_heads", "kv_seq", "head_dim")),
-    }
-
-
-def attn_page_spec(cfg, n_pages: int, page_size: int, max_batch: int, dtype):
-    """ShapeDtypeStructs + logical axes for one layer's PAGED self-attn
-    cache (serving/kv_cache.py layout): bit-packed keys and dense values in
-    fixed-size physical pages, plus the per-slot running key scale."""
-    hkv, d = cfg.n_kv_heads, cfg.head_dim
-    if cfg.attn_mode != "camformer":
-        raise ValueError("paged KV cache requires attn_mode='camformer'")
-    if page_size % cfg.group_size != 0:
-        raise ValueError(
-            f"page_size={page_size} must tile by group_size={cfg.group_size}")
-    return {
-        "kp_pages": (jax.ShapeDtypeStruct(
-            (n_pages, hkv, page_size, d // 32), jnp.uint32),
-            (None, "kv_heads", None, None)),
-        "v_pages": (jax.ShapeDtypeStruct(
-            (n_pages, hkv, page_size, d), dtype),
-            (None, "kv_heads", None, "head_dim")),
-        "k_scale": (jax.ShapeDtypeStruct((max_batch, hkv), jnp.float32),
-                    ("batch", "kv_heads")),
-    }
-
-
-def _paged_write(cache, k, v, positions, page_table, kv_len, cfg):
-    """Splice new K/V into the paged pools at their logical positions.
-
-    k, v: (B, H_kv, S, D); positions: (B, S) logical token positions;
-    kv_len: (B,) — valid tokens per slot INCLUDING this write (prefill:
-    the true prompt length; decode: pos + 1).  Tokens at positions >=
-    kv_len are right-padding: their page-table entries resolve to the
-    trash page and they are excluded from the k_scale running mean.
-    """
-    page = cache["kp_pages"].shape[2]
-    b, hkv, s, _ = k.shape
-    pos = positions.astype(jnp.int32)
-    kv_len = kv_len.reshape(b).astype(jnp.int32)
-    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-    phys = page_table[bidx, pos // page]  # (B, S) physical pages
-    row = pos % page
-
-    kp = bacam.pack_bits(sign_pm1(k))  # (B, H_kv, S, W)
-    new_kp = cache["kp_pages"].at[phys, :, row].set(kp.transpose(0, 2, 1, 3))
-    new_v = cache["v_pages"].at[phys, :, row].set(
-        v.astype(cache["v_pages"].dtype).transpose(0, 2, 1, 3))
-
-    # Running per-slot/head key scale over VALID tokens only.
-    valid = (pos < kv_len[:, None]).astype(jnp.float32)  # (B, S)
-    mean_d = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)  # (B,Hkv,S)
-    new_sum = jnp.einsum("bhs,bs->bh", mean_d, valid)
-    cnt = jnp.sum(valid, axis=-1)  # (B,)
-    prior = jnp.minimum(pos[:, 0], kv_len).astype(jnp.float32)
-    total = prior + cnt
-    ks = ((cache["k_scale"] * prior[:, None] + new_sum)
-          / jnp.maximum(total, 1.0)[:, None])
-    ks = jnp.where((total > 0)[:, None], ks, cache["k_scale"])
-    return {"kp_pages": new_kp, "v_pages": new_v, "k_scale": ks}
-
-
-def _paged_cam_attend(q, cache, page_table, kv_len, positions, cfg, spec):
-    """Decode/prefill attention against the paged bit-packed cache."""
-    return camformer_paged_attention(
-        q, cache["kp_pages"], cache["v_pages"], cache["k_scale"],
-        page_table, kv_len, positions, spec, window=cfg.window)
+def attn_cache_spec(cfg, batch: int, cache_len: int, dtype, backend=None):
+    """ShapeDtypeStructs + logical axes for one layer's self-attn cache
+    (delegates to the layer's backend)."""
+    return _resolve_backend(cfg, backend).cache_spec(
+        cfg, batch, cache_len, dtype)
 
 
 def _project(p, x, cfg, training: bool = True):
@@ -204,191 +123,6 @@ def _attn_strategy(cfg, training: bool = True) -> str:
     return "kv_seq" if training else "q_seq"
 
 
-def _seq_insert(buf, upd, index):
-    """Insert `upd` into `buf` along axis 2 (cache seq).
-
-    index: scalar — uniform write (train/prefill/dry-run decode);
-           (B,) array — ragged per-slot write (continuous batching).
-    """
-    zero = jnp.zeros((), jnp.int32)
-    if jnp.ndim(index) == 0:
-        return jax.lax.dynamic_update_slice(buf, upd, (zero, zero, index, zero))
-    one = lambda b, u, i: jax.lax.dynamic_update_slice(b, u, (zero, i, zero))
-    return jax.vmap(one)(buf, upd, index.astype(jnp.int32))
-
-
-def _write_cache(cache, k, v, index, cfg):
-    """Insert new K/V at `index` (traced) along the cache sequence axis.
-
-    If the update is longer than the cache (window ring-buffer prefill),
-    only the trailing cache-length slice is stored at index 0.
-    """
-    if cache is None:
-        return None
-    cache_len = cache["v"].shape[2]
-    if k.shape[2] > cache_len:
-        k, v = k[:, :, -cache_len:], v[:, :, -cache_len:]
-        index = jnp.int32(0)
-    if "k_packed" in cache:
-        kp = bacam.pack_bits(sign_pm1(k))
-        new_kp = _seq_insert(cache["k_packed"], kp, index)
-        new_v = _seq_insert(cache["v"], v.astype(cache["v"].dtype), index)
-        # running per-head key scale (softmax temperature bookkeeping)
-        step = jnp.float32(k.shape[2])
-        new_mean = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=(2, 3))
-        idx_f = jnp.reshape(index.astype(jnp.float32), (-1, 1))
-        total = idx_f + step
-        k_scale = (cache["k_scale"] * idx_f + new_mean * step) / total
-        return {"k_packed": new_kp, "v": new_v, "k_scale": k_scale}
-    new_k = _seq_insert(cache["k"], k.astype(cache["k"].dtype), index)
-    new_v = _seq_insert(cache["v"], v.astype(cache["v"].dtype), index)
-    return {"k": new_k, "v": new_v}
-
-
-def _distributed_cam_attend(q, cache, kv_len, positions, cfg, spec):
-    """Distributed CAM search (paper Sec. IV-C at cluster scale).
-
-    The packed-binary cache is sequence-sharded across the mesh; each shard
-    runs the BA-CAM scoring + two-stage top-k LOCALLY, shards exchange only
-    their k candidates (k*(8 B) per query per shard — vs gathering the full
-    N-score matchline vector), the global top-k/softmax is computed
-    redundantly everywhere, and contextualization is a masked partial sum
-    over local V rows finished by one psum.
-    """
-    env = compat.get_abstract_mesh()
-    axes = tuple(a for a in ("pod", "data", "model")
-                 if a in getattr(env, "shape", {}) and env.shape[a] > 1)
-    if not axes:
-        return _camformer_cache_attend(q, cache, kv_len, positions, cfg, spec)
-    import math
-
-    from jax.sharding import PartitionSpec as P
-
-    b, h, sq, d = q.shape
-    hkv = cfg.n_kv_heads
-    g = h // hkv
-    skv = cache["v"].shape[2]
-    n_shards = math.prod(env.shape[a] for a in axes)
-    s_local = skv // n_shards
-    qb = sign_pm1(q.astype(jnp.float32))
-    q_scale = jnp.mean(jnp.abs(q.astype(jnp.float32)), axis=-1)  # (B,H,Sq)
-    qp = bacam.pack_bits(qb).reshape(b, hkv, g * sq, d // 32)
-
-    k_top = spec.k_top
-
-    def local_fn(qp_l, kp_l, v_l, kscale_l, qscale_l, pos_l, kvlen_l):
-        # shard offset along the cache sequence
-        idx = 0
-        for a in axes:
-            idx = idx * env.shape[a] + jax.lax.axis_index(a)
-        offset = idx * s_local
-        scores = bacam.hamming_scores_packed(qp_l, kp_l, d).astype(jnp.float32)
-        kpos = offset + jnp.arange(s_local, dtype=jnp.int32)[None, None, None]
-        qpos = jnp.broadcast_to(pos_l[:, None, :], (b, hkv, sq))
-        qpos = jnp.broadcast_to(qpos[:, :, None, :], (b, hkv, g, sq)).reshape(
-            b, hkv, g * sq)[..., None]
-        ok = (kpos < kvlen_l.reshape(b, 1, 1, 1)) & (kpos <= qpos)
-        if cfg.window is not None:
-            ok = ok & (kpos > qpos - cfg.window)
-        masked = jnp.where(ok, scores, NEG_INF)
-        lv, li = two_stage_topk(masked, k=k_top, group_size=spec.group_size,
-                                stage1_k=spec.stage1_k)  # local top-k
-        li = li + offset  # globalize indices
-        # exchange candidates only: (B,Hkv,R,k) per shard
-        cv = jax.lax.all_gather(lv, axes, axis=-1, tiled=True)
-        ci = jax.lax.all_gather(li, axes, axis=-1, tiled=True)
-        top_v, sel = jax.lax.top_k(cv, k_top)  # identical on every shard
-        top_i = jnp.take_along_axis(ci, sel, axis=-1)
-        scale = 1.0 / (d**0.5)
-        temp = (qscale_l.reshape(b, hkv, g * sq)[..., None]
-                * kscale_l[:, :, None, None])
-        w, valid = topk_softmax_weights(top_v, temp, scale)  # (B,Hkv,R,k)
-        # partial contextualization over local V rows
-        mine = (top_i >= offset) & (top_i < offset + s_local) & valid
-        loc = jnp.clip(top_i - offset, 0, s_local - 1)
-        v_exp = v_l[:, :, None]  # (B,Hkv,1,S_local,D)
-        v_sel = jnp.take_along_axis(v_exp, loc[..., None], axis=-2)
-        contrib = jnp.einsum("bhrk,bhrkd->bhrd",
-                             jnp.where(mine, w, 0.0).astype(jnp.float32),
-                             v_sel.astype(jnp.float32))
-        return jax.lax.psum(contrib, axes)
-
-    seq_spec = P(None, None, axes, None)
-    out = compat.shard_map(
-        local_fn,
-        mesh=env,
-        in_specs=(P(), seq_spec,
-                  P(None, None, axes, None), P(), P(), P(), P()),
-        out_specs=P(),
-    )(qp, cache["k_packed"], cache["v"], cache["k_scale"], q_scale,
-      positions, kv_len)
-    out = out.reshape(b, hkv, g, sq, d).reshape(b, h, sq, d)
-    return out.astype(q.dtype)
-
-
-def _camformer_cache_attend(q, cache, kv_len, positions, cfg, spec,
-                            kv_positions=None):
-    """Decode/serve attention against the packed binary cache."""
-    b, h, sq, d = q.shape
-    hkv = cfg.n_kv_heads
-    g = h // hkv
-    skv = cache["v"].shape[2]
-    qb = sign_pm1(q.astype(jnp.float32))
-    q_scale = jnp.mean(jnp.abs(q.astype(jnp.float32)), axis=-1)  # (B,H,Sq)
-
-    qp = bacam.pack_bits(qb).reshape(b * hkv, g * sq, d // 32)
-    kp = cache["k_packed"].reshape(b * hkv, skv, d // 32)
-    if spec.use_kernel and kv_positions is not None:
-        # the fused kernel masks from slot order; ring caches with rotated
-        # positions take the jnp path instead
-        spec = spec.replace(use_kernel=False)
-    if spec.use_kernel:
-        from repro.kernels import ops as kops
-
-        pos = jnp.broadcast_to(
-            positions[:, None, :], (b, hkv, g * sq)).reshape(b * hkv, g * sq)
-        kvl = jnp.broadcast_to(kv_len.reshape(b, 1), (b, hkv)).reshape(b * hkv)
-        cand_v, cand_i = kops.bacam_attention_scores_topk_packed(
-            qp, kp, pos, kvl, d=d,
-            group=spec.group_size, stage1_k=spec.stage1_k,
-            causal=True, window=cfg.window)
-        top_v, sel = jax.lax.top_k(cand_v, min(spec.k_top, cand_v.shape[-1]))
-        top_i = jnp.take_along_axis(cand_i, sel, axis=-1)
-        top_v = top_v.reshape(b, hkv, g, sq, -1)
-        top_i = top_i.reshape(b, hkv, g, sq, -1)
-    else:
-        scores = bacam.hamming_scores_packed(
-            qp.reshape(b, hkv, g * sq, d // 32),
-            kp.reshape(b, hkv, skv, d // 32),
-            d,
-        )  # (B,Hkv,G*Sq,Skv)
-        if kv_positions is None:
-            kpos = jnp.arange(skv, dtype=jnp.int32)[None, None, None]
-        else:  # ring cache: slots hold true (rotated) positions
-            kpos = kv_positions[:, None, None, :]
-        qpos = jnp.broadcast_to(positions[:, None, :], (b, hkv, sq))
-        qpos = jnp.broadcast_to(qpos[:, :, None, :], (b, hkv, g, sq)).reshape(
-            b, hkv, g * sq)[..., None]
-        ok = kpos < kv_len.reshape(b, 1, 1, 1)
-        ok = ok & (kpos <= qpos)
-        if cfg.window is not None:
-            ok = ok & (kpos > qpos - cfg.window)
-        masked = jnp.where(ok, scores.astype(jnp.float32), NEG_INF)
-        top_v, top_i = two_stage_topk(
-            masked, k=spec.k_top, group_size=spec.group_size,
-            stage1_k=spec.stage1_k)
-        top_v = top_v.reshape(b, hkv, g, sq, -1)
-        top_i = top_i.reshape(b, hkv, g, sq, -1)
-
-    scale = 1.0 / (d**0.5)
-    temp = q_scale.reshape(b, hkv, g, sq)[..., None] * cache["k_scale"][:, :, None, None, None]
-    w, _ = topk_softmax_weights(top_v, temp, scale)
-    v_exp = cache["v"][:, :, None, None]  # (B,Hkv,1,1,Skv,Dv)
-    v_sel = jnp.take_along_axis(v_exp, top_i[..., None], axis=-2)
-    out = jnp.einsum("bhgqk,bhgqkd->bhgqd", w.astype(cache["v"].dtype), v_sel)
-    return out.reshape(b, h, sq, d).astype(q.dtype)
-
-
 def attention_block(
     p,
     x: jax.Array,
@@ -403,6 +137,7 @@ def attention_block(
     causal: bool = True,
     window: int | None = None,
     cross_kv=None,
+    backend=None,
 ):
     """Full attention sub-block. Returns (out (B,S,d_model), new_cache).
 
@@ -414,62 +149,48 @@ def attention_block(
                       chunks and decode both splice into pages and attend
                       through the page table (no contiguous KV buffer)
       cross-attention: cross_kv=(k, v) precomputed     — no cache write
+
+    ``backend`` selects the physical realization (an AttentionBackend or
+    registry name); default is the config's uniform backend.
     """
+    bk = _resolve_backend(cfg, backend)
     b, s, _ = x.shape
     dt = x.dtype
     q, k, v = _project(p, x, cfg, training=cache is None and cross_kv is None)
-    spec = spec_from_cfg(cfg)
 
     if cross_kv is not None:
         k, v = cross_kv
         # Paper Sec. IV-C: enc-dec models use non-causal CAM search over
-        # encoder keys — camformer mode applies to cross-attention too.
-        out = attention(q, k, v, spec, causal=False)
+        # encoder keys — the backend applies to cross-attention too.
+        out = bk.prefill(q, k, v, cfg, causal=False)
     else:
         if getattr(cfg, "use_rope", True):
             q = rope(q, positions, cfg.rope_theta)
             k = rope(k, positions, cfg.rope_theta)
-        if cache is not None and "kp_pages" in cache:
-            if page_table is None or kv_len is None:
+        if cache is not None and "v" not in cache and page_table is None:
+            # a paged pool (k_pages/kp_pages + v_pages) reached the
+            # contiguous path — fail loudly, not with a KeyError below
+            raise ValueError("paged cache needs page_table and kv_len")
+        if page_table is not None and cache is not None:
+            if kv_len is None:
                 raise ValueError("paged cache needs page_table and kv_len")
-            new_cache = _paged_write(
-                cache, k, v, positions, page_table, kv_len, cfg)
-            out = _paged_cam_attend(
-                q, new_cache, page_table, kv_len, positions, cfg, spec)
+            out, new_cache = bk.paged_decode(
+                q, cache, k, v, positions, page_table, kv_len, cfg)
             out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
             out = constrain(out, ("batch", "seq", "heads"))
             return (out @ p["wo"].astype(dt)), new_cache
-        new_cache = _write_cache(
-            cache, k, v,
-            cache_index if cache_index is not None else jnp.int32(0), cfg)
+        index = cache_index if cache_index is not None else jnp.int32(0)
         if cache is not None and kv_len is not None:
             # decode / cached path: attend over the (partially valid) cache
-            if "k_packed" in new_cache:
-                # distributed CAM search targets the batch=1 long-context
-                # regime where the cache sequence takes every mesh axis;
-                # batched decode keeps batch-sharded local search instead
-                if cfg.distributed_topk and kv_positions is None and b == 1:
-                    out = _distributed_cam_attend(
-                        q, new_cache, kv_len, positions, cfg, spec)
-                else:
-                    out = _camformer_cache_attend(
-                        q, new_cache, kv_len, positions, cfg, spec,
-                        kv_positions=kv_positions)
-            else:
-                ck, cv = new_cache["k"], new_cache["v"]
-                kv_pos = (jnp.arange(ck.shape[2], dtype=jnp.int32)[None]
-                          if kv_positions is None else kv_positions)
-                kv_valid = kv_pos < kv_len.reshape(-1, 1)
-                out = attention(
-                    q, ck, cv, spec, causal=True,
-                    q_positions=positions, kv_positions=kv_pos,
-                    kv_valid=kv_valid, window=window or cfg.window)
+            out, cache = bk.decode(
+                q, cache, k, v, index, kv_len, positions, cfg,
+                kv_positions=kv_positions, window=window)
         else:
             # train / prefill: attend over freshly-computed K/V
-            out = attention(
-                q, k, v, spec, causal=causal,
-                q_positions=positions, window=window or cfg.window)
-        cache = new_cache
+            cache = bk.write_cache(cache, k, v, index, cfg)
+            out = bk.prefill(
+                q, k, v, cfg, causal=causal,
+                positions=positions, window=window or cfg.window)
 
     out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
     # Preserve the attention-interior layout on the way out: under q_seq the

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models.attention import (attn_cache_spec, attn_specs,
-                                    attention_block, spec_from_cfg)
+                                    attention_block)
 from repro.models.transformer import ModelDef, _last_logits, dtype_of, stack_specs
 from repro.sharding.partitioning import constrain
 

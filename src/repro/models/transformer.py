@@ -18,10 +18,10 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.core.backend import backends_for
 from repro.models import layers as L
 from repro.models import moe as M
-from repro.models.attention import (attn_cache_spec, attn_page_spec,
-                                    attn_specs, attention_block)
+from repro.models.attention import attn_specs, attention_block
 from repro.models.module import Param, is_param
 from repro.sharding.partitioning import constrain
 
@@ -67,11 +67,11 @@ def _block_specs(cfg):
 
 
 def _apply_block(p, x, cfg, *, positions, cache=None, cache_index=None,
-                 kv_len=None, page_table=None, causal=True):
+                 kv_len=None, page_table=None, causal=True, backend=None):
     h, new_cache = attention_block(
         p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg,
         positions=positions, cache=cache, cache_index=cache_index,
-        kv_len=kv_len, page_table=page_table, causal=causal)
+        kv_len=kv_len, page_table=page_table, causal=causal, backend=backend)
     x = constrain(x + h, ("batch", "res_seq", "embed"))
     ff_in = L.apply_norm(p["ln2"], x, cfg)
     if cfg.n_experts:
@@ -92,9 +92,19 @@ def lm_specs(cfg):
 
 def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
                  kv_len=None, page_table=None, causal=True):
-    """Run the layer stack; returns (x, new_caches, aux_sums)."""
+    """Run the layer stack; returns (x, new_caches, aux_sums).
 
-    def body(carry, xs):
+    Uniform-backend stacks run under jax.lax.scan with layer-stacked
+    caches.  A per-layer backend policy (cfg.layer_backends) makes cache
+    pytrees heterogeneous across layers, so those stacks unroll: caches
+    are a TUPLE of per-layer trees and each layer binds its own backend.
+    """
+    backends = backends_for(cfg)
+    # the same predicate decides cache layout in lm_cache_specs/lm_page_specs
+    uniform = cfg.uniform_backend is not None
+    per_layer_caches = isinstance(caches, (tuple, list))
+
+    def body(carry, xs, backend=backends[0]):
         h, aux_sum = carry
         layer_p, layer_cache = xs
         if not isinstance(layer_cache, dict):  # train: no cache threaded
@@ -102,17 +112,16 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
         h, new_cache, aux = _apply_block(
             layer_p, h, cfg, positions=positions, cache=layer_cache,
             cache_index=cache_index, kv_len=kv_len, page_table=page_table,
-            causal=causal)
+            causal=causal, backend=backend)
         aux_vec = jnp.stack(
             [aux.get("moe_aux_loss", jnp.float32(0)),
              aux.get("moe_drop_frac", jnp.float32(0))])
         return (h, aux_sum + aux_vec), new_cache
 
-    body_fn = body
-    if cfg.remat == "full":
-        body_fn = jax.checkpoint(body, prevent_cse=False)
-
-    if cfg.scan_layers:
+    if cfg.scan_layers and uniform and not per_layer_caches:
+        body_fn = body
+        if cfg.remat == "full":
+            body_fn = jax.checkpoint(body, prevent_cse=False)
         (x, aux_sum), new_caches = jax.lax.scan(
             body_fn, (x, jnp.zeros(2, jnp.float32)), (params["blocks"], caches))
     else:
@@ -120,11 +129,25 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
         outs = []
         for i in range(cfg.n_layers):
             layer_p = jax.tree.map(lambda a: a[i], params["blocks"])
-            layer_c = None if caches is None else jax.tree.map(lambda a: a[i], caches)
-            (x, aux_sum), nc = body_fn((x, aux_sum), (layer_p, layer_c))
+            if caches is None:
+                layer_c = None
+            elif per_layer_caches:
+                layer_c = caches[i]
+            else:
+                layer_c = jax.tree.map(lambda a: a[i], caches)
+            # bind the layer's backend BEFORE any transform so the object
+            # never flows through tracing as a pytree input
+            bound = functools.partial(body, backend=backends[i])
+            if cfg.remat == "full":
+                bound = jax.checkpoint(bound, prevent_cse=False)
+            (x, aux_sum), nc = bound((x, aux_sum), (layer_p, layer_c))
             outs.append(nc)
-        new_caches = (None if caches is None
-                      else jax.tree.map(lambda *cs: jnp.stack(cs), *outs))
+        if caches is None:
+            new_caches = None
+        elif per_layer_caches:
+            new_caches = tuple(outs)
+        else:
+            new_caches = jax.tree.map(lambda *cs: jnp.stack(cs), *outs)
     aux = {"moe_aux_loss": aux_sum[0] / cfg.n_layers,
            "moe_drop_frac": aux_sum[1] / cfg.n_layers}
     return x, new_caches, aux
@@ -173,14 +196,25 @@ def lm_loss(params, batch, cfg):
     return loss, stats
 
 
-def lm_cache_specs(cfg, batch: int, cache_len: int):
-    dt = dtype_of(cfg)
-    one = attn_cache_spec(cfg, batch, cache_len, dt)
+def _stack_layer_specs(cfg, one):
+    """Add the leading `layers` axis to a single-layer spec tree."""
     return {
         k: (jax.ShapeDtypeStruct((cfg.n_layers,) + sds.shape, sds.dtype),
             ("layers",) + axes)
         for k, (sds, axes) in one.items()
     }
+
+
+def lm_cache_specs(cfg, batch: int, cache_len: int):
+    """Cache specs: layer-stacked (scan-compatible) for a uniform backend;
+    a TUPLE of per-layer spec trees under a mixed layer_backends policy
+    (layouts differ per layer, so the stack unrolls)."""
+    dt = dtype_of(cfg)
+    bks = backends_for(cfg)
+    if cfg.uniform_backend is not None:
+        return _stack_layer_specs(cfg, bks[0].cache_spec(cfg, batch,
+                                                         cache_len, dt))
+    return tuple(bk.cache_spec(cfg, batch, cache_len, dt) for bk in bks)
 
 
 def lm_prefill(params, batch, caches, cfg):
@@ -227,14 +261,17 @@ def lm_prefill(params, batch, caches, cfg):
 
 
 def lm_page_specs(cfg, n_pages: int, page_size: int, max_batch: int):
-    """Layer-stacked paged-pool specs (serving/kv_cache.py layout)."""
+    """Paged-pool specs (serving/kv_cache.py layout): layer-stacked for a
+    uniform backend, per-layer tuple under a mixed policy — dense bf16
+    pages and bit-packed CAM pages then live side by side in one pool."""
     dt = dtype_of(cfg)
-    one = attn_page_spec(cfg, n_pages, page_size, max_batch, dt)
-    return {
-        k: (jax.ShapeDtypeStruct((cfg.n_layers,) + sds.shape, sds.dtype),
-            ("layers",) + axes)
-        for k, (sds, axes) in one.items()
-    }
+    bks = backends_for(cfg)
+    if cfg.uniform_backend is not None:
+        return _stack_layer_specs(cfg, bks[0].page_spec(cfg, n_pages,
+                                                        page_size, max_batch,
+                                                        dt))
+    return tuple(bk.page_spec(cfg, n_pages, page_size, max_batch, dt)
+                 for bk in bks)
 
 
 def lm_prefill_paged(params, batch, caches, page_table, cfg):

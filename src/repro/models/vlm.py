@@ -43,4 +43,8 @@ def make_model_def():
         prefill=prefill,
         decode=T.lm_decode,
         cache_specs=T.lm_cache_specs,
+        # text-only serving: the backbone pages exactly like the LM
+        page_specs=T.lm_page_specs,
+        prefill_paged=T.lm_prefill_paged,
+        decode_paged=T.lm_decode_paged,
     )

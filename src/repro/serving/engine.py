@@ -6,18 +6,22 @@ cache, and every engine step decodes all active slots at their own
 positions (ragged positions / kv lengths are native to the attention
 masking).
 
-Two cache regimes:
+ONE cache regime: every config serves from the paged KV cache
+(serving/kv_cache.py).  The page *layout* is backend-polymorphic — each
+layer's ``AttentionBackend`` (core/backend.py, resolved per layer via
+``cfg.backend_for``) declares its pool leaves through the model's
+``page_specs``:
 
-  * paged (``attn_mode="camformer"`` on models exposing the paged
-    interface): keys live bit-packed in fixed-size pages with a free-list
-    allocator (serving/kv_cache.py) — a slot owns pages for the tokens it
-    actually needs (prompt + max_new), not a contiguous ``max_len``
-    reservation, so the same pool admits far more concurrent sequences.
-    Admission prefills ALL newly admitted prompts in one batched (and,
-    with cfg.prefill_chunk, chunked) forward; decode runs the fused Pallas
-    paged CAM kernel (kernels/bacam_decode.py) every step.
-  * dense (everything else): the seed behavior — per-slot contiguous
-    buffers of ``max_len``, batch-of-one prefill spliced at the free slot.
+  * dense / binary layers: bf16 ``k_pages`` / ``v_pages``;
+  * camformer layers: bit-packed uint32 ``kp_pages`` (6.25% of bf16) +
+    ``v_pages`` + the running ``k_scale`` temperature,
+
+so a mixed ``layer_backends`` config keeps both layouts live in the same
+pool, indirected by one shared page table.  A slot owns pages for the
+tokens it actually needs (prompt + max_new), never a contiguous
+``max_len`` reservation; admission prefills ALL newly admitted prompts in
+one batched (and, with cfg.prefill_chunk, chunked) forward, and decode
+runs every layer's ``backend.paged_decode`` each step.
 """
 
 from __future__ import annotations
@@ -53,45 +57,41 @@ class ServeEngine:
     def __init__(self, md, cfg, params, *, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
                  page_size: int = 64, n_pages: Optional[int] = None):
+        if md.page_specs is None:
+            raise ValueError(
+                f"{cfg.name!r} (family {cfg.family!r}) does not expose the "
+                "paged serving interface (page_specs / prefill_paged / "
+                "decode_paged) required by ServeEngine")
         self.md, self.cfg = md, cfg
         self.params = cast_params(params, dtype_of(cfg))
         self.max_batch, self.max_len = max_batch, max_len
         self.rng = jax.random.PRNGKey(seed)
 
-        self.paged = (getattr(cfg, "attn_mode", "dense") == "camformer"
-                      and getattr(md, "page_specs", None) is not None)
+        # prefill pads prompt batches to prefill_chunk multiples capped
+        # at max_len; an indivisible max_len would silently skip the
+        # chunked path (and its activation-memory bound) at the cap
+        chunk = cfg.prefill_chunk
+        if chunk and max_len % chunk != 0:
+            raise ValueError(
+                f"max_len={max_len} must be a multiple of "
+                f"prefill_chunk={chunk} for paged serving")
+        per_seq = pages_for(max_len, page_size)
+        if n_pages is None:
+            # Default: full residency (every slot can reach max_len).
+            # Smaller pools trade capacity for admission backpressure.
+            n_pages = 1 + max_batch * per_seq  # +1: trash page
+        self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
+        specs = md.page_specs(cfg, n_pages, page_size, max_batch)
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
-        zeros = lambda t: jnp.zeros(t[0].shape, t[0].dtype)
-        if self.paged:
-            # prefill pads prompt batches to prefill_chunk multiples capped
-            # at max_len; an indivisible max_len would silently skip the
-            # chunked path (and its activation-memory bound) at the cap
-            chunk = getattr(cfg, "prefill_chunk", 0)
-            if chunk and max_len % chunk != 0:
-                raise ValueError(
-                    f"max_len={max_len} must be a multiple of "
-                    f"prefill_chunk={chunk} for paged serving")
-            per_seq = pages_for(max_len, page_size)
-            if n_pages is None:
-                # Default: full residency (every slot can reach max_len).
-                # Smaller pools trade capacity for admission backpressure.
-                n_pages = 1 + max_batch * per_seq  # +1: trash page
-            self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
-            specs = md.page_specs(cfg, n_pages, page_size, max_batch)
-            self.caches = jax.tree.map(zeros, specs, is_leaf=is_leaf)
-            self._decode = jax.jit(
-                lambda p, t, pos, kvl, c, pt: md.decode_paged(
-                    p, t, pos, kvl, c, pt, cfg))
-            self._prefill = jax.jit(
-                lambda p, b, c, pt: md.prefill_paged(p, b, c, pt, cfg))
-        else:
-            caches = md.cache_specs(cfg, max_batch, max_len)
-            self.caches = jax.tree.map(zeros, caches, is_leaf=is_leaf)
-            self._decode = jax.jit(
-                lambda p, t, pos, kvl, c: md.decode(p, t, pos, kvl, c, cfg))
-            self._prefill = jax.jit(
-                lambda p, b, c: md.prefill(p, b, c, cfg))
+        self.caches = jax.tree.map(
+            lambda t: jnp.zeros(t[0].shape, t[0].dtype), specs,
+            is_leaf=is_leaf)
+        self._decode = jax.jit(
+            lambda p, t, pos, kvl, c, pt: md.decode_paged(
+                p, t, pos, kvl, c, pt, cfg))
+        self._prefill = jax.jit(
+            lambda p, b, c, pt: md.prefill_paged(p, b, c, pt, cfg))
 
         self.pos = np.zeros(max_batch, np.int32)  # next position per slot
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -114,42 +114,8 @@ class ServeEngine:
         self.rng, sub = jax.random.split(self.rng)
         return sub
 
-    # -- dense (seed) admission ----------------------------------------
-    def _splice_cache(self, slot: int, one_cache):
-        """Insert a batch-of-one prefill cache into the shared cache."""
-        def ins(big, small):
-            if big.ndim < 2:
-                return big
-            # batch axis: layer-stacked leaves -> axis 1; flat leaves -> 0
-            ax = 1 if big.shape[0] == small.shape[0] and big.ndim == small.ndim and big.shape[1] == self.max_batch else 0
-            idx = [slice(None)] * big.ndim
-            idx[ax] = slice(slot, slot + 1)
-            return big.at[tuple(idx)].set(small)
-        self.caches = jax.tree.map(ins, self.caches, one_cache)
-
-    def _admit_dense(self):
-        for slot in range(self.max_batch):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue.pop(0)
-            prompt = jnp.asarray(req.prompt, jnp.int32)[None]
-            one_caches = jax.tree.map(
-                lambda t: jnp.zeros(
-                    (t.shape[0], 1) + t.shape[2:], t.dtype)
-                if t.ndim >= 2 and t.shape[1] == self.max_batch
-                else jnp.zeros((1,) + t.shape[1:], t.dtype),
-                self.caches)
-            batch = {"tokens": prompt}
-            logits, one_caches = self._prefill(self.params, batch, one_caches)
-            self._splice_cache(slot, one_caches)
-            first = int(S.greedy(logits)[0]) if req.temperature == 0.0 else int(
-                S.sample(logits, self._next_rng(), temperature=req.temperature)[0])
-            req.tokens.append(first)
-            self.active[slot] = req
-            self.pos[slot] = len(req.prompt)
-
-    # -- paged admission: batched (chunked) prefill --------------------
-    def _admit_paged(self):
+    # -- admission: batched (chunked) prefill into pages ---------------
+    def _admit(self):
         admitted: List[tuple] = []
         for slot in range(self.max_batch):
             if self.active[slot] is not None or not self.queue:
@@ -193,12 +159,6 @@ class ServeEngine:
             self.active[slot] = req
             self.pos[slot] = len(req.prompt)
 
-    def _admit(self):
-        if self.paged:
-            self._admit_paged()
-        else:
-            self._admit_dense()
-
     def _retire(self):
         """Move finished requests out of their slots, freeing pages."""
         for i, r in enumerate(self.active):
@@ -208,8 +168,7 @@ class ServeEngine:
                     or self.pos[i] >= self.max_len - 1):
                 self.done.append(r)
                 self.active[i] = None
-                if self.paged:
-                    self.kv.release(i)
+                self.kv.release(i)
 
     # ------------------------------------------------------------------
     def step(self):
@@ -224,13 +183,9 @@ class ServeEngine:
                 tokens[i] = r.tokens[-1]
         pos = jnp.asarray(self.pos)
         kv_len = jnp.asarray(self.pos + 1)
-        if self.paged:
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(tokens), pos, kv_len, self.caches,
-                jnp.asarray(self.kv.table))
-        else:
-            logits, self.caches = self._decode(
-                self.params, jnp.asarray(tokens), pos, kv_len, self.caches)
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(tokens), pos, kv_len, self.caches,
+            jnp.asarray(self.kv.table))
         nxt = S.greedy(logits)
         nxt_host = np.asarray(nxt)
         for i, r in enumerate(self.active):

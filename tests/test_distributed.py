@@ -184,8 +184,7 @@ def test_distributed_camformer_matches_local():
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import smoke_config
-from repro.models.attention import (_camformer_cache_attend,
-                                    _distributed_cam_attend, spec_from_cfg)
+from repro.core.backend import get_backend
 from repro.core import bacam, sign_pm1
 from repro.launch.mesh import make_mesh_for
 
@@ -193,9 +192,9 @@ from repro.utils import compat
 mesh = make_mesh_for(4, 2)  # data=2, model=2
 compat.set_mesh(mesh)
 cfg = smoke_config("codeqwen1.5-7b", head_dim=128, n_heads=4,
-                   n_kv_heads=2).replace(attn_mode="camformer", k_top=8,
+                   n_kv_heads=2).replace(attn_backend="camformer", k_top=8,
                                          group_size=4, stage1_k=2)
-spec = spec_from_cfg(cfg)
+bk = get_backend(cfg.backend)
 B, HKV, H, S, D = 1, 2, 4, 64, 128
 k_raw = jax.random.normal(jax.random.PRNGKey(3), (B, HKV, S, D))
 cache = {
@@ -207,14 +206,14 @@ q = jax.random.normal(jax.random.PRNGKey(2), (B, H, 1, D))
 pos = jnp.full((B, 1), 40, jnp.int32)
 kvl = jnp.full((B,), 41, jnp.int32)
 with mesh:
-    local = jax.jit(lambda q, c: _camformer_cache_attend(
-        q, c, kvl, pos, cfg, spec))(q, cache)
+    local = jax.jit(lambda q, c: bk._cache_attend(
+        q, c, kvl, pos, cfg))(q, cache)
     sh = NamedSharding(mesh, P(None, None, ("data", "model"), None))
     cache_sh = dict(cache)
     cache_sh["k_packed"] = jax.device_put(cache["k_packed"], sh)
     cache_sh["v"] = jax.device_put(cache["v"], sh)
-    dist = jax.jit(lambda q, c: _distributed_cam_attend(
-        q, c, kvl, pos, cfg, spec))(q, cache_sh)
+    dist = jax.jit(lambda q, c: bk._distributed_attend(
+        q, c, kvl, pos, cfg))(q, cache_sh)
 err = float(jnp.abs(local - dist).max())
 assert err < 1e-4, err
 print("OK")

@@ -1,6 +1,8 @@
-"""Paged bit-packed KV cache: allocator churn, packed-key round-trip,
-fused paged kernel vs oracle, decode-vs-prefill logit consistency, and
-engine equivalence under page pressure."""
+"""Paged KV cache: allocator churn, packed-key round-trip, fused paged
+kernel vs oracle, decode-vs-prefill logit consistency, and engine
+equivalence under page pressure — the engine-level tests run as a
+backend matrix (dense bf16 pages vs camformer bit-packed pages) against
+the contiguous-cache reference of the same backend."""
 
 import jax
 import jax.numpy as jnp
@@ -28,7 +30,12 @@ def _zeros(specs):
 
 
 def _cam_cfg(**kw):
-    return smoke_config("codeqwen1.5-7b").replace(attn_mode="camformer", **kw)
+    return smoke_config("codeqwen1.5-7b").replace(attn_backend="camformer",
+                                                  **kw)
+
+
+def _cfg_for(backend, **kw):
+    return smoke_config("codeqwen1.5-7b").replace(attn_backend=backend, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -99,15 +106,15 @@ def test_paged_write_roundtrips_packed_keys():
         kv.reserve(b, lens[b])
     pt = jnp.asarray(kv.table)
 
-    from repro.models.attention import _paged_write
+    from repro.core.backend import get_backend
     hkv, d = cfg.n_kv_heads, cfg.head_dim
     s = 16
     k = jax.random.normal(jax.random.PRNGKey(1), (B, hkv, s, d))
     v = jax.random.normal(jax.random.PRNGKey(2), (B, hkv, s, d))
     pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (B, s))
     layer0 = jax.tree.map(lambda a: a[0], pools)
-    new = _paged_write(layer0, k, v, pos, pt, jnp.asarray(lens, jnp.int32),
-                       cfg)
+    new = get_backend("camformer")._paged_write(
+        layer0, k, v, pos, pt, jnp.asarray(lens, jnp.int32), cfg)
 
     want = bacam.pack_bits(sign_pm1(k))  # (B, hkv, s, W) — binarize layout
     got = kref.paged_gather_ref(new["kp_pages"], pt)  # (B, hkv, NP*page, W)
@@ -157,11 +164,12 @@ def test_paged_topk_kernel_matches_oracle(window):
 # decode-vs-prefill logit consistency (camformer mode, paged cache)
 
 
+@pytest.mark.parametrize("backend", ["dense", "camformer"])
 @pytest.mark.parametrize("chunk,plen", [(0, 9), (4, 8)])
-def test_paged_decode_consistent_with_prefill(chunk, plen):
+def test_paged_decode_consistent_with_prefill(backend, chunk, plen):
     """Decode of the last prompt token == one-shot prefill logits, for
     both the whole-prompt and the chunked (lax.scan) prefill branch."""
-    cfg = _cam_cfg(prefill_chunk=chunk)
+    cfg = _cfg_for(backend, prefill_chunk=chunk)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     prompt = list(map(int,
@@ -195,17 +203,20 @@ def test_paged_decode_consistent_with_prefill(chunk, plen):
 
 
 @pytest.mark.slow
-def test_paged_engine_matches_dense_cache_reference():
-    """Greedy generations through the paged engine (slot churn, batched
-    prefill, fused paged decode) == the contiguous dense-cache camformer
-    path driven one request at a time."""
-    cfg = _cam_cfg()
+@pytest.mark.parametrize("backend", ["dense", "camformer"])
+def test_paged_engine_matches_contiguous_reference(backend):
+    """Backend-equivalence matrix: greedy generations through the paged
+    engine (slot churn, batched prefill, paged decode) == the seed-era
+    contiguous-cache path of the SAME backend driven one request at a
+    time, token-for-token at temperature 0.  For ``dense`` this pins the
+    new dense-paged layout to the seed dense reference."""
+    cfg = _cfg_for(backend)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     prompts = [[5, 9, 2], [7, 7, 1, 3, 8, 2, 4], [11, 4], [1, 2, 3, 4, 5]]
     new = 6
 
-    # reference: seed dense-cache camformer prefill/decode, batch of one
+    # reference: seed contiguous-cache prefill/decode, batch of one
     def reference(p):
         dc = _zeros(md.cache_specs(cfg, 1, 64))
         logits, dc = md.prefill(
@@ -235,9 +246,10 @@ def test_paged_engine_matches_dense_cache_reference():
     assert eng.kv.free_pages == eng.kv.n_pages - 1  # everything released
 
 
-def test_paged_engine_page_pressure_queues_and_completes():
+@pytest.mark.parametrize("backend", ["dense", "camformer"])
+def test_paged_engine_page_pressure_queues_and_completes(backend):
     # chunked prefill on (prompts longer than the chunk hit the scan path)
-    cfg = _cam_cfg(prefill_chunk=8)
+    cfg = _cfg_for(backend, prefill_chunk=8)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     # pool of 4 usable pages x 8 tokens; requests need 2-3 pages ->
