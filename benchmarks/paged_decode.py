@@ -3,8 +3,11 @@
 Times one continuous-batching decode tick (all slots active) and reports
 decode ticks/s plus KV-cache bytes/token for each attention backend's
 page layout — dense bf16 pages vs camformer bit-packed pages — as a
-comparison table.  Fast enough for CI (`run.py --smoke`), and a
-regression canary for the decode hot path's dispatch overhead.
+comparison table, then measures page-pool utilization with and without
+copy-on-write prefix sharing (N requests with a common system prompt
+prefill it once and alias its pages).  Fast enough for CI
+(`run.py --smoke`), and a regression canary for the decode hot path's
+dispatch overhead and the allocator's sharing behavior.
 
 Standalone:
 
@@ -21,21 +24,25 @@ from repro.configs import smoke_config
 from repro.core.backend import get_backend
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving import Request, SamplingParams, ServeEngine
+
+
+def _engine(backend, **kw):
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend=backend)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    return cfg, ServeEngine(md, cfg, params, **kw)
 
 
 def bench_backend(backend: str, *, max_batch=4, max_new=8, page_size=16,
                   max_len=64):
     """One engine run on the smoke config; returns the metrics row."""
-    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend=backend)
-    md = get_model_def(cfg)
-    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(md, cfg, params, max_batch=max_batch, max_len=max_len,
-                      page_size=page_size)
+    cfg, eng = _engine(backend, max_batch=max_batch, max_len=max_len,
+                       page_size=page_size)
     for i in range(max_batch):
-        eng.submit(Request(prompt=[3 + i, 5, 8, 1], max_new_tokens=max_new,
-                           rid=i))
-    eng._admit()  # batched prefill + compile
+        eng.submit(Request(prompt=[3 + i, 5, 8, 1],
+                           sampling=SamplingParams(max_new=max_new), rid=i))
+    eng.prefill(eng.schedule())  # batched prefill + compile
     resident = eng.kv.used_pages
     eng.step()  # decode compile
     t0 = time.perf_counter()
@@ -55,6 +62,36 @@ def bench_backend(backend: str, *, max_batch=4, max_new=8, page_size=16,
         "kv_bytes_per_token": bytes_tok,
         "resident_pages": resident,
         "pool_pages": eng.kv.n_pages - 1,
+    }
+
+
+def bench_prefix_sharing(backend="dense", *, n_requests=6, prefix_len=32,
+                         max_new=4, page_size=16, max_len=64):
+    """Pool utilization for N requests sharing a common prompt prefix:
+    COW sharing must make peak residency measurably smaller than N
+    independent reservations."""
+    system = list(range(7, 7 + prefix_len))
+    prompts = [system + [50 + i, 51 + i] for i in range(n_requests)]
+    peaks = {}
+    for share in (False, True):
+        _, eng = _engine(backend, max_batch=n_requests, max_len=max_len,
+                         page_size=page_size, prefix_sharing=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=list(p),
+                               sampling=SamplingParams(max_new=max_new),
+                               rid=i))
+        eng.run()
+        peaks[share] = eng.peak_pages
+    pool = eng.kv.n_pages - 1
+    return {
+        "backend": backend,
+        "n_requests": n_requests,
+        "prefix_len": prefix_len,
+        "peak_pages_independent": peaks[False],
+        "peak_pages_shared": peaks[True],
+        "pool_pages": pool,
+        "util_independent": peaks[False] / pool,
+        "util_shared": peaks[True] / pool,
     }
 
 
@@ -82,6 +119,21 @@ def run(csv_rows, *, max_batch=4, max_new=8, backends=("dense", "camformer")):
                          r["us_per_tick"], f"B={max_batch} us/tick"))
         csv_rows.append((f"paged_kv_bytes_per_token_{r['backend']}",
                          r["kv_bytes_per_token"], "bytes/token all layers"))
+
+    share = bench_prefix_sharing(backends[0])
+    print(f"\n== COW prefix sharing ({share['backend']}): "
+          f"{share['n_requests']} requests, {share['prefix_len']}-token "
+          f"shared prefix ==")
+    print(f"  peak pool residency: {share['peak_pages_independent']} pages "
+          f"independent -> {share['peak_pages_shared']} shared "
+          f"(of {share['pool_pages']}; utilization "
+          f"{share['util_independent']:.0%} -> {share['util_shared']:.0%})")
+    csv_rows.append((f"prefix_peak_pages_independent_{share['backend']}",
+                     share["peak_pages_independent"],
+                     f"N={share['n_requests']} prefix={share['prefix_len']}"))
+    csv_rows.append((f"prefix_peak_pages_shared_{share['backend']}",
+                     share["peak_pages_shared"],
+                     f"N={share['n_requests']} prefix={share['prefix_len']}"))
     return csv_rows
 
 

@@ -1,5 +1,6 @@
-"""Serve a small model with batched requests through the continuous-
-batching engine, comparing dense vs CAMformer attention caches.
+"""Serve a small model through the continuous-batching engine: streamed
+outputs, per-request sampling, and copy-on-write prefix sharing, compared
+across dense / CAMformer attention page layouts.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -11,7 +12,7 @@ import jax
 from repro.configs import smoke_config
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving import Request, SamplingParams, ServeEngine
 
 
 LAYOUTS = {
@@ -21,16 +22,21 @@ LAYOUTS = {
 }
 
 
-def run(backend: str, layer_backends=None):
+def build(backend, layer_backends=None, **kw):
     cfg = smoke_config("codeqwen1.5-7b").replace(
         attn_backend=backend, layer_backends=layer_backends)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
-    eng = ServeEngine(md, cfg, params, max_batch=4, max_len=96)
+    return cfg, ServeEngine(md, cfg, params, max_batch=4, max_len=96, **kw)
+
+
+def run(backend: str, layer_backends=None):
+    cfg, eng = build(backend, layer_backends)
     prompts = [[7, 3, 9, 1], [5, 5, 2], [8, 1, 4, 4, 6], [2, 9],
                [1, 2, 3, 4, 5], [6, 6, 6]]
     for i, p in enumerate(prompts):
-        eng.submit(Request(prompt=p, max_new_tokens=12, rid=i))
+        eng.submit(Request(prompt=p, sampling=SamplingParams(max_new=12),
+                           rid=i))
     t0 = time.perf_counter()
     done = eng.run()
     dt = time.perf_counter() - t0
@@ -45,8 +51,41 @@ def run(backend: str, layer_backends=None):
         print(f"   req {r.rid}: {r.prompt} -> {r.tokens}")
 
 
+def run_streaming():
+    """Tokens surface as they are generated — iterator or callback."""
+    _, eng = build("camformer")
+    reqs = [Request(prompt=[7, 3, 9, 1],
+                    sampling=SamplingParams(max_new=8)),  # greedy
+            Request(prompt=[5, 5, 2],
+                    sampling=SamplingParams(temperature=0.8, top_k=40,
+                                            top_p=0.95, max_new=8))]
+    print("[streaming      ] ", end="")
+    for out in eng.stream(*reqs):
+        print(f"r{out.rid}:{out.token}", end=" ")
+    print()
+
+
+def run_prefix_sharing():
+    """A shared 24-token system prompt is prefilled ONCE: later requests
+    alias its full pages (refcount++) and COW-fork the boundary page."""
+    system = list(range(100, 124))
+    prompts = [system + [i, 2 * i + 1] for i in range(1, 7)]
+    stats = {}
+    for share in (False, True):
+        _, eng = build("camformer", page_size=16, prefix_sharing=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=list(p),
+                               sampling=SamplingParams(max_new=8), rid=i))
+        eng.run()
+        stats[share] = eng.peak_pages
+    print(f"[prefix sharing ] 6 requests x 26-token prompts (24 shared): "
+          f"peak {stats[False]} pages independent vs {stats[True]} shared")
+
+
 if __name__ == "__main__":
     run("dense")
     run("camformer")
     # per-layer policy: both page layouts live in the same pool
     run("dense", layer_backends=("dense", "camformer"))
+    run_streaming()
+    run_prefix_sharing()

@@ -8,6 +8,7 @@ with the exact published dimensions and register themselves.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional, Tuple
 
 _REGISTRY: dict = {}
@@ -98,6 +99,11 @@ class ModelConfig:
                 f"conflicting attn_mode={self.attn_mode!r} (deprecated "
                 f"alias) and attn_backend={self.attn_backend!r}; set only "
                 "attn_backend")
+        if self.attn_mode is not None:
+            warnings.warn(
+                f"attn_mode={self.attn_mode!r} is deprecated; use "
+                "attn_backend (core/backend.py registry name)",
+                DeprecationWarning, stacklevel=3)
 
     # --- attention-backend resolution (the deprecation shim: every
     # consumer goes through these accessors; nothing outside this file

@@ -99,12 +99,26 @@ def _seq_insert(buf, upd, index):
     return jax.vmap(one)(buf, upd, index.astype(jnp.int32))
 
 
-def _page_phys_rows(page_table, positions, page: int):
-    """(physical page, in-page row) of each logical position. Both (B, S)."""
+_TRASH_PAGE = 0  # serving/kv_cache.py contract: physical page 0 is trash
+
+
+def _page_phys_rows(page_table, positions, page: int, kv_len=None):
+    """(physical page, in-page row) of each logical position. Both (B, S).
+
+    With kv_len (B,), positions >= kv_len (right-padding rows of a
+    batched prefill) resolve to the TRASH page: their logical positions
+    can exceed the slot's page-table extent (prefix-sharing offsets push
+    padding past max_len), where jnp's clamped indexing would otherwise
+    alias them onto the slot's last page and corrupt live rows.
+    """
     b = positions.shape[0]
     pos = positions.astype(jnp.int32)
     bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
-    return page_table[bidx, pos // page], pos % page
+    col = jnp.clip(pos // page, 0, page_table.shape[1] - 1)
+    phys = page_table[bidx, col]
+    if kv_len is not None:
+        phys = jnp.where(pos < kv_len.reshape(b, 1), phys, _TRASH_PAGE)
+    return phys, pos % page
 
 
 # ---------------------------------------------------------------------------
@@ -166,10 +180,16 @@ class AttentionBackend:
         raise NotImplementedError
 
     def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
-                     cfg):
+                     cfg, *, base=None):
         """Splice k/v into the paged pools at their logical positions and
         attend through the page table (decode rows AND chunked-prefill
-        rows — the single serving path).  Returns (out, new_pools)."""
+        rows — the single serving path).  Returns (out, new_pools).
+
+        ``base`` (B,) is each slot's prefix-sharing offset: positions
+        below it were prefilled by ANOTHER slot into shared pages, so
+        per-slot running statistics (camformer's ``k_scale``) must count
+        only positions >= base.  None means no sharing (all zeros).
+        """
         raise NotImplementedError
 
     # -- contiguous-cache write (shared ring-buffer clamp) --------------
@@ -242,9 +262,9 @@ class DenseBackend(AttentionBackend):
             kv_valid=kv_valid, window=window or cfg.window)
         return out, new_cache
 
-    def _paged_write(self, cache, k, v, positions, page_table):
+    def _paged_write(self, cache, k, v, positions, page_table, kv_len=None):
         page = cache["k_pages"].shape[2]
-        phys, row = _page_phys_rows(page_table, positions, page)
+        phys, row = _page_phys_rows(page_table, positions, page, kv_len)
         new_k = cache["k_pages"].at[phys, :, row].set(
             k.astype(cache["k_pages"].dtype).transpose(0, 2, 1, 3))
         new_v = cache["v_pages"].at[phys, :, row].set(
@@ -252,10 +272,14 @@ class DenseBackend(AttentionBackend):
         return {"k_pages": new_k, "v_pages": new_v}
 
     def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
-                     cfg):
+                     cfg, *, base=None):
         from repro.kernels.ref import paged_gather_ref
 
-        new_cache = self._paged_write(cache, k, v, positions, page_table)
+        # dense pages carry no per-slot running statistics: `base` only
+        # affects which positions are freshly written, which the page
+        # table already encodes
+        new_cache = self._paged_write(cache, k, v, positions, page_table,
+                                      kv_len)
         # Gather the slot's pages into logical order and run the standard
         # masked attend — logical position p is row p of the gather, so the
         # contiguous-cache masking applies verbatim.
@@ -355,9 +379,9 @@ class CamformerBackend(AttentionBackend):
         return out, new_cache
 
     def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
-                     cfg):
+                     cfg, *, base=None):
         new_cache = self._paged_write(
-            cache, k, v, positions, page_table, kv_len, cfg)
+            cache, k, v, positions, page_table, kv_len, cfg, base=base)
         out = camformer_paged_attention(
             q, new_cache["kp_pages"], new_cache["v_pages"],
             new_cache["k_scale"], page_table, kv_len, positions,
@@ -365,7 +389,8 @@ class CamformerBackend(AttentionBackend):
         return out, new_cache
 
     # -- internals ------------------------------------------------------
-    def _paged_write(self, cache, k, v, positions, page_table, kv_len, cfg):
+    def _paged_write(self, cache, k, v, positions, page_table, kv_len, cfg,
+                     base=None):
         """Splice new K/V into the paged pools at their logical positions.
 
         k, v: (B, H_kv, S, D); positions: (B, S) logical token positions;
@@ -374,12 +399,19 @@ class CamformerBackend(AttentionBackend):
         positions >= kv_len are right-padding: their page-table entries
         resolve to the trash page and they are excluded from the k_scale
         running mean.
+
+        base: (B,) prefix-sharing offset.  The slot's k_scale running
+        mean counts only the positions THIS slot computed (>= base) —
+        tokens below base live in shared pages written by another slot,
+        whose k contribution this slot never sees.  The suffix mean is
+        the sharing approximation for the softmax temperature; it keeps
+        k_scale strictly per-slot state (fork siblings stay independent).
         """
         page = cache["kp_pages"].shape[2]
         b = k.shape[0]
         pos = positions.astype(jnp.int32)
         kv_len = kv_len.reshape(b).astype(jnp.int32)
-        phys, row = _page_phys_rows(page_table, pos, page)
+        phys, row = _page_phys_rows(page_table, pos, page, kv_len)
 
         kp = bacam.pack_bits(sign_pm1(k))  # (B, H_kv, S, W)
         new_kp = cache["kp_pages"].at[phys, :, row].set(
@@ -392,7 +424,11 @@ class CamformerBackend(AttentionBackend):
         mean_d = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)  # (B,Hkv,S)
         new_sum = jnp.einsum("bhs,bs->bh", mean_d, valid)
         cnt = jnp.sum(valid, axis=-1)  # (B,)
-        prior = jnp.minimum(pos[:, 0], kv_len).astype(jnp.float32)
+        if base is None:
+            base = jnp.zeros((b,), jnp.int32)
+        prior = jnp.clip(jnp.minimum(pos[:, 0], kv_len)
+                         - base.reshape(b).astype(jnp.int32),
+                         0, None).astype(jnp.float32)
         total = prior + cnt
         ks = ((cache["k_scale"] * prior[:, None] + new_sum)
               / jnp.maximum(total, 1.0)[:, None])

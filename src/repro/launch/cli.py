@@ -9,6 +9,7 @@ onto ``--backend`` with a note.
 from __future__ import annotations
 
 import argparse
+import warnings
 
 __all__ = ["add_backend_args", "apply_backend_args", "resolve_backend_arg"]
 
@@ -30,11 +31,16 @@ def resolve_backend_arg(args) -> str | None:
     """The requested backend name, honoring the deprecated alias."""
     if args.attn_mode:
         if args.backend and args.backend != args.attn_mode:
-            print(f"note: --attn-mode {args.attn_mode} is deprecated and "
-                  f"IGNORED in favor of --backend {args.backend}")
-            return args.backend
-        print("note: --attn-mode is deprecated; use --backend "
-              f"(treating as --backend {args.attn_mode})")
+            raise SystemExit(
+                f"conflicting --attn-mode {args.attn_mode} (deprecated "
+                f"alias) and --backend {args.backend}; pass only --backend")
+        warnings.warn(
+            f"--attn-mode is deprecated; use --backend {args.attn_mode}",
+            DeprecationWarning, stacklevel=2)
+        # DeprecationWarning is filtered outside __main__ by default;
+        # CLI users still need to see the note
+        print(f"note: --attn-mode is deprecated; use --backend "
+              f"{args.attn_mode}")
         return args.attn_mode
     return args.backend
 

@@ -1,8 +1,13 @@
-"""Serving driver: batched decode with continuous batching.
+"""Serving driver: continuous batching with streamed outputs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch camformer-bert --smoke \
         --requests 12 --max-new 24 [--backend camformer] \
-        [--layer-backends dense,camformer]
+        [--layer-backends dense,camformer] [--temperature 0.8 --top-k 40 \
+        --top-p 0.95] [--shared-prefix 32] [--no-stream]
+
+Tokens print as they are generated (``engine.stream()``); ``--shared-prefix N``
+prepends a common N-token system prompt to every request to exercise the
+copy-on-write prefix sharing (the page-pool report shows the aliasing).
 """
 
 import argparse
@@ -13,7 +18,7 @@ from repro.configs import get_config, smoke_config
 from repro.launch.cli import add_backend_args, apply_backend_args
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving import Request, SamplingParams, ServeEngine
 
 
 def main():
@@ -25,12 +30,20 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="common system-prompt length prepended to every "
+                         "request (exercises COW prefix sharing)")
     ap.add_argument("--page-size", type=int, default=64,
                     help="paged-cache page size (camformer mode)")
     ap.add_argument("--n-pages", type=int, default=None,
                     help="page-pool size; default = full residency")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill chunk length (0 = whole prompt)")
+    ap.add_argument("--no-stream", action="store_true",
+                    help="suppress per-token output, print only summaries")
     args = ap.parse_args()
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -46,15 +59,26 @@ def main():
     print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
           f"{eng.kv.page_size} tokens "
           f"(page table {eng.kv.table.shape})")
+    sampling = SamplingParams(
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        max_new=args.max_new)
     rng = jax.random.PRNGKey(7)
+    shared = list(range(1, args.shared_prefix + 1))
     for i in range(args.requests):
         rng, sub = jax.random.split(rng)
         plen = 4 + int(jax.random.randint(sub, (), 0, 12))
-        prompt = list(map(int, jax.random.randint(sub, (plen,), 0, cfg.vocab)))
-        eng.submit(Request(prompt=prompt, max_new_tokens=args.max_new, rid=i))
-    done = eng.run()
-    for r in sorted(done, key=lambda r: r.rid):
-        print(f"req {r.rid}: prompt[{len(r.prompt)}] -> {r.tokens}")
+        prompt = shared + list(
+            map(int, jax.random.randint(sub, (plen,), 0, cfg.vocab)))
+        eng.submit(Request(prompt=prompt, sampling=sampling, rid=i))
+    for out in eng.stream():
+        if not args.no_stream:
+            tail = f"  [{out.finish_reason}]" if out.finished else ""
+            print(f"  req {out.rid} #{out.index}: {out.token}{tail}")
+    print(f"peak pool residency: {eng.peak_pages}/{eng.kv.n_pages - 1} pages"
+          f" ({eng.kv.shared_pages} still shared at drain)")
+    for r in sorted(eng.done, key=lambda r: r.rid):
+        print(f"req {r.rid}: prompt[{len(r.prompt)}] "
+              f"prefix_hit={r.prefix_matched} -> {r.tokens}")
 
 
 if __name__ == "__main__":

@@ -134,6 +134,7 @@ def attention_block(
     kv_len=None,
     kv_positions=None,
     page_table=None,
+    scale_base=None,
     causal: bool = True,
     window: int | None = None,
     cross_kv=None,
@@ -175,7 +176,8 @@ def attention_block(
             if kv_len is None:
                 raise ValueError("paged cache needs page_table and kv_len")
             out, new_cache = bk.paged_decode(
-                q, cache, k, v, positions, page_table, kv_len, cfg)
+                q, cache, k, v, positions, page_table, kv_len, cfg,
+                base=scale_base)
             out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
             out = constrain(out, ("batch", "seq", "heads"))
             return (out @ p["wo"].astype(dt)), new_cache

@@ -40,8 +40,8 @@ class ModelDef(NamedTuple):
     cache_specs: Callable[..., Any]  # (cfg, batch, cache_len) -> tree of (SDS, axes)
     # Paged-serving interface (None for families without a paged cache):
     # page_specs(cfg, n_pages, page_size, max_batch) -> tree of (SDS, axes)
-    # prefill_paged(params, batch{tokens,lens}, pools, page_table, cfg)
-    # decode_paged(params, tokens, pos, kv_len, pools, page_table, cfg)
+    # prefill_paged(params, batch{tokens,lens[,offsets]}, pools, table, cfg)
+    # decode_paged(params, tokens, pos, kv_len, pools, table, cfg[, base])
     page_specs: Optional[Callable[..., Any]] = None
     prefill_paged: Optional[Callable[..., Any]] = None
     decode_paged: Optional[Callable[..., Any]] = None
@@ -67,11 +67,13 @@ def _block_specs(cfg):
 
 
 def _apply_block(p, x, cfg, *, positions, cache=None, cache_index=None,
-                 kv_len=None, page_table=None, causal=True, backend=None):
+                 kv_len=None, page_table=None, scale_base=None, causal=True,
+                 backend=None):
     h, new_cache = attention_block(
         p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg,
         positions=positions, cache=cache, cache_index=cache_index,
-        kv_len=kv_len, page_table=page_table, causal=causal, backend=backend)
+        kv_len=kv_len, page_table=page_table, scale_base=scale_base,
+        causal=causal, backend=backend)
     x = constrain(x + h, ("batch", "res_seq", "embed"))
     ff_in = L.apply_norm(p["ln2"], x, cfg)
     if cfg.n_experts:
@@ -91,7 +93,7 @@ def lm_specs(cfg):
 
 
 def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
-                 kv_len=None, page_table=None, causal=True):
+                 kv_len=None, page_table=None, scale_base=None, causal=True):
     """Run the layer stack; returns (x, new_caches, aux_sums).
 
     Uniform-backend stacks run under jax.lax.scan with layer-stacked
@@ -112,7 +114,7 @@ def _scan_blocks(params, x, cfg, *, positions, caches=None, cache_index=None,
         h, new_cache, aux = _apply_block(
             layer_p, h, cfg, positions=positions, cache=layer_cache,
             cache_index=cache_index, kv_len=kv_len, page_table=page_table,
-            causal=causal, backend=backend)
+            scale_base=scale_base, causal=causal, backend=backend)
         aux_vec = jnp.stack(
             [aux.get("moe_aux_loss", jnp.float32(0)),
              aux.get("moe_drop_frac", jnp.float32(0))])
@@ -159,8 +161,8 @@ def _none_caches(cfg):
 
 
 def lm_hidden(params, tokens, cfg, *, positions=None, caches=None,
-              cache_index=None, kv_len=None, page_table=None, causal=True,
-              prefix_embeds=None):
+              cache_index=None, kv_len=None, page_table=None,
+              scale_base=None, causal=True, prefix_embeds=None):
     """tokens (B, S) -> final hidden states (B, S[+P], d)."""
     dt = dtype_of(cfg)
     x = L.embed_lookup(params["embed"], tokens, cfg, dt)
@@ -177,7 +179,7 @@ def lm_hidden(params, tokens, cfg, *, positions=None, caches=None,
     x, new_caches, aux = _scan_blocks(
         params, x, cfg, positions=positions, caches=caches,
         cache_index=cache_index, kv_len=kv_len, page_table=page_table,
-        causal=causal)
+        scale_base=scale_base, causal=causal)
     x = L.apply_norm(params["ln_f"], x, cfg)
     # loss/head consumers slice along seq: hand them a seq-replicated copy
     x = constrain(x, ("batch", None, "embed"))
@@ -277,15 +279,23 @@ def lm_page_specs(cfg, n_pages: int, page_size: int, max_batch: int):
 def lm_prefill_paged(params, batch, caches, page_table, cfg):
     """Batched prefill into the paged cache.
 
-    batch: tokens (B, S) right-padded prompts, lens (B,) true lengths
-    (lens == 0 marks an inactive slot whose page-table row must point at
-    the trash page).  With cfg.prefill_chunk set and S a chunk multiple,
-    the prompt batch is processed in chunks that attend to the pages
-    written so far (chunked prefill, activation memory bounded by the
-    chunk).  Returns (per-slot last-prompt-token logits (B, V), pools).
+    batch: tokens (B, S) right-padded prompt SUFFIXES, lens (B,) TOTAL
+    valid lengths (lens == 0 marks an inactive slot whose page-table row
+    must point at the trash page), and optional offsets (B,) — each
+    slot's first computed position.  A nonzero offset means positions
+    [0, offset) live in already-prefilled pages (copy-on-write prefix
+    sharing): the slot's tokens are the suffix starting at ``offset``,
+    attending through the page table to the shared prefix rows.  With
+    cfg.prefill_chunk set and S a chunk multiple, the suffix batch is
+    processed in chunks that attend to the pages written so far (chunked
+    prefill, activation memory bounded by the chunk).  Returns (per-slot
+    last-prompt-token logits (B, V), pools).
     """
     tokens, lens = batch["tokens"], batch["lens"].astype(jnp.int32)
     b, s = tokens.shape
+    offsets = batch.get("offsets")
+    offsets = (jnp.zeros((b,), jnp.int32) if offsets is None
+               else offsets.astype(jnp.int32))
     chunk = cfg.prefill_chunk
     if chunk and s > chunk and s % chunk == 0:
         n = s // chunk
@@ -293,34 +303,39 @@ def lm_prefill_paged(params, batch, caches, page_table, cfg):
 
         def body(cs, xs):
             i, tk = xs
-            pos = (i * chunk
-                   + jnp.arange(chunk, dtype=jnp.int32))[None].repeat(b, 0)
+            pos = (offsets[:, None] + i * chunk
+                   + jnp.arange(chunk, dtype=jnp.int32)[None])
             x, cs, _ = lm_hidden(
                 params, tk, cfg, positions=pos, caches=cs, kv_len=lens,
-                page_table=page_table, causal=True)
+                page_table=page_table, scale_base=offsets, causal=True)
             return cs, x
 
         caches, xs = jax.lax.scan(
             body, caches, (jnp.arange(n, dtype=jnp.int32), toks))
         x = xs.swapaxes(0, 1).reshape(b, s, -1)  # (B, S, d)
     else:
+        pos = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         x, caches, _ = lm_hidden(
-            params, tokens, cfg, caches=caches, kv_len=lens,
-            page_table=page_table, causal=True)
+            params, tokens, cfg, positions=pos, caches=caches, kv_len=lens,
+            page_table=page_table, scale_base=offsets, causal=True)
+    # the final prompt token sits at suffix row (lens - offsets - 1)
     last = jnp.take_along_axis(
-        x, jnp.maximum(lens - 1, 0)[:, None, None].astype(jnp.int32),
+        x, jnp.maximum(lens - offsets - 1, 0)[:, None, None].astype(
+            jnp.int32),
         axis=1)[:, 0]
     return _head_logits(params, last, cfg), caches
 
 
-def lm_decode_paged(params, tokens, pos, kv_len, caches, page_table, cfg):
-    """One decode step against the paged cache. tokens/pos/kv_len: (B,)."""
+def lm_decode_paged(params, tokens, pos, kv_len, caches, page_table, cfg,
+                    base=None):
+    """One decode step against the paged cache. tokens/pos/kv_len: (B,);
+    base: (B,) per-slot prefix-sharing offset (see lm_prefill_paged)."""
     b = tokens.shape[0]
     positions = pos.reshape(b, 1).astype(jnp.int32)
     x, caches, _ = lm_hidden(
         params, tokens.reshape(b, 1), cfg, positions=positions,
         caches=caches, kv_len=kv_len.astype(jnp.int32),
-        page_table=page_table, causal=True)
+        page_table=page_table, scale_base=base, causal=True)
     return _last_logits(params, x, cfg), caches
 
 

@@ -1,0 +1,23 @@
+"""Serving: paged KV cache + continuous-batching engine + samplers.
+
+Public surface:
+
+    from repro.serving import (ServeEngine, Request, SamplingParams,
+                               RequestState, RequestOutput)
+
+    eng = ServeEngine(md, cfg, params, max_batch=8, max_len=512)
+    for out in eng.stream(Request(prompt=ids,
+                                  sampling=SamplingParams(max_new=64))):
+        print(out.rid, out.token, out.finished)
+"""
+
+from repro.serving.engine import Admission, ServeEngine
+from repro.serving.kv_cache import (PagedKVCache, PrefixMatch, TRASH_PAGE,
+                                    pages_for)
+from repro.serving.request import (Request, RequestOutput, RequestState,
+                                   SamplingParams)
+
+__all__ = [
+    "Admission", "ServeEngine", "PagedKVCache", "PrefixMatch", "TRASH_PAGE",
+    "pages_for", "Request", "RequestOutput", "RequestState", "SamplingParams",
+]

@@ -1,33 +1,44 @@
-"""Batched serving engine with continuous batching.
+"""Production serving engine: continuous batching with an explicit
+request lifecycle, streamed outputs, per-request sampling, priority
+preemption, and copy-on-write prefix sharing.
 
-Slot-based scheduling over a fixed decode batch: finished sequences free
-their slot, queued prompts are prefilled and spliced into the shared KV
-cache, and every engine step decodes all active slots at their own
-positions (ragged positions / kv lengths are native to the attention
-masking).
+Architecture (one engine tick = ``step()``):
+
+  1. ``schedule()`` — ADMISSION POLICY, host-only.  Picks queued requests
+     (highest priority first, FIFO within a class), hash-matches their
+     prompts against the paged cache's prefix registry (shared system
+     prompts attach already-prefilled pages read-only; a mid-page match
+     forks its boundary page copy-on-write), reserves pages for
+     ``prompt + max_new`` up front, and — under page pressure — preempts
+     the lowest-priority decoding slot back to the queue (pages released,
+     generated tokens kept; resume re-prefills prompt+generated).
+  2. ``prefill(admissions)`` — one batched (and, with
+     ``cfg.prefill_chunk``, chunked) forward over every admitted suffix.
+     Requests with a matched prefix prefill ONLY the unmatched tokens at
+     their true positions (``offsets``); the first generated token is
+     sampled per-request (temperature / top-k / top-p).
+  3. decode tick — every active slot advances one token through its
+     layer's ``backend.paged_decode``, sampled with its own
+     ``SamplingParams``; finished/stopped requests retire and free pages.
+
+Streaming: every generated token is surfaced as a ``RequestOutput`` from
+``step()`` / the ``engine.stream()`` iterator, and through each request's
+``on_token`` callback.  ``cancel(rid)`` removes a queued or running
+request immediately and frees its pages.
 
 ONE cache regime: every config serves from the paged KV cache
 (serving/kv_cache.py).  The page *layout* is backend-polymorphic — each
 layer's ``AttentionBackend`` (core/backend.py, resolved per layer via
 ``cfg.backend_for``) declares its pool leaves through the model's
-``page_specs``:
-
-  * dense / binary layers: bf16 ``k_pages`` / ``v_pages``;
-  * camformer layers: bit-packed uint32 ``kp_pages`` (6.25% of bf16) +
-    ``v_pages`` + the running ``k_scale`` temperature,
-
-so a mixed ``layer_backends`` config keeps both layouts live in the same
-pool, indirected by one shared page table.  A slot owns pages for the
-tokens it actually needs (prompt + max_new), never a contiguous
-``max_len`` reservation; admission prefills ALL newly admitted prompts in
-one batched (and, with cfg.prefill_chunk, chunked) forward, and decode
-runs every layer's ``backend.paged_decode`` each step.
+``page_specs``: dense/binary layers use bf16 ``k_pages``/``v_pages``,
+camformer layers bit-packed uint32 ``kp_pages`` + ``v_pages`` +
+``k_scale``, all indirected by one shared page table.  COW forks copy a
+physical page across every layer's pools in one jitted device op.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional
+from typing import Iterator, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -36,27 +47,54 @@ import numpy as np
 from repro.launch.steps import cast_params
 from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
-from repro.serving.kv_cache import TRASH_PAGE, PagedKVCache, pages_for
+from repro.serving.kv_cache import (NO_MATCH, TRASH_PAGE, PagedKVCache,
+                                    pages_for)
+from repro.serving.request import (Request, RequestOutput, RequestState,
+                                   SamplingParams)
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "SamplingParams", "RequestState", "RequestOutput",
+           "Admission", "ServeEngine"]
 
 # Right-pad prompt batches to a multiple of this (bounds jit retraces).
 PREFILL_BUCKET = 16
 
 
-@dataclasses.dataclass
-class Request:
-    prompt: List[int]
-    max_new_tokens: int = 32
-    temperature: float = 0.0
-    rid: int = 0
-    tokens: Optional[List[int]] = None  # generated
+class Admission(NamedTuple):
+    """One scheduling decision: where a request lands and what it shares."""
+
+    slot: int
+    req: Request
+    resume_from: int  # generated tokens carried across a preemption
+    matched: int  # prefix tokens served from shared pages (0 = none)
+    forks: Tuple[Tuple[int, int], ...]  # (src, dst) COW page copies
+
+
+def _copy_pool_page(caches, src, dst):
+    """Copy physical page ``src`` -> ``dst`` across every layer's page
+    pools (the device half of a COW fork).  Page leaves are recognized by
+    the ``*_pages`` naming contract of ``AttentionBackend.page_spec``;
+    per-slot leaves (``k_scale``) are untouched."""
+
+    def one(layer, axis):
+        out = {}
+        for name, arr in layer.items():
+            if name.endswith("_pages"):
+                sl = (slice(None),) * axis
+                out[name] = arr.at[sl + (dst,)].set(arr[sl + (src,)])
+            else:
+                out[name] = arr
+        return out
+
+    if isinstance(caches, tuple):  # mixed layer_backends: per-layer trees
+        return tuple(one(layer, 0) for layer in caches)
+    return one(caches, 1)  # uniform: leading `layers` axis
 
 
 class ServeEngine:
     def __init__(self, md, cfg, params, *, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
-                 page_size: int = 64, n_pages: Optional[int] = None):
+                 page_size: int = 64, n_pages: Optional[int] = None,
+                 prefix_sharing: bool = True):
         if md.page_specs is None:
             raise ValueError(
                 f"{cfg.name!r} (family {cfg.family!r}) does not expose the "
@@ -66,6 +104,7 @@ class ServeEngine:
         self.params = cast_params(params, dtype_of(cfg))
         self.max_batch, self.max_len = max_batch, max_len
         self.rng = jax.random.PRNGKey(seed)
+        self.prefix_sharing = prefix_sharing
 
         # prefill pads prompt batches to prefill_chunk multiples capped
         # at max_len; an indivisible max_len would silently skip the
@@ -88,115 +127,287 @@ class ServeEngine:
             lambda t: jnp.zeros(t[0].shape, t[0].dtype), specs,
             is_leaf=is_leaf)
         self._decode = jax.jit(
-            lambda p, t, pos, kvl, c, pt: md.decode_paged(
-                p, t, pos, kvl, c, pt, cfg))
+            lambda p, t, pos, kvl, c, pt, base: md.decode_paged(
+                p, t, pos, kvl, c, pt, cfg, base=base))
         self._prefill = jax.jit(
             lambda p, b, c, pt: md.prefill_paged(p, b, c, pt, cfg))
+        self._fork = jax.jit(_copy_pool_page)
 
         self.pos = np.zeros(max_batch, np.int32)  # next position per slot
+        self.base = np.zeros(max_batch, np.int32)  # prefix offset per slot
         self.active: List[Optional[Request]] = [None] * max_batch
         self.queue: List[Request] = []
         self.done: List[Request] = []
+        self.peak_pages = 0  # high-water mark of unique resident pages
+        self._next_rid = 0
+        self._arrival = 0  # FIFO tiebreak within a priority class
+        self._admissions = 0  # preemption tiebreak (evict newest first)
 
     # ------------------------------------------------------------------
-    def submit(self, req: Request):
-        req.tokens = []
+    # submission / cancellation
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its rid (auto-assigned when None)."""
+        if req.rid is None:
+            req.rid = self._next_rid
+        self._next_rid = max(self._next_rid, req.rid + 1)
         if not req.prompt:
             raise ValueError(f"request {req.rid}: empty prompt")
-        if len(req.prompt) + req.max_new_tokens > self.max_len:
+        need = len(req.prompt) + req.sampling.max_new
+        if need > self.max_len:
             raise ValueError(
-                f"request {req.rid}: prompt+max_new "
-                f"{len(req.prompt) + req.max_new_tokens} > max_len "
+                f"request {req.rid}: prompt+max_new {need} > max_len "
                 f"{self.max_len}")
+        req.state = RequestState.QUEUED
+        req.tokens = []
+        req.finish_reason = None
+        req._seq = self._arrival  # FIFO order, kept across preemption
+        self._arrival += 1
         self.queue.append(req)
+        return req.rid
 
+    def cancel(self, rid: int) -> Optional[RequestOutput]:
+        """Terminate a queued or running request NOW; running requests
+        free their pages immediately.  Returns the final output record,
+        or None if rid is not live."""
+        for qi, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(qi)
+                return self._finish(r, "cancelled")
+        for slot, r in enumerate(self.active):
+            if r is not None and r.rid == rid:
+                self.kv.release(slot)
+                self.active[slot] = None
+                return self._finish(r, "cancelled")
+        return None
+
+    def _finish(self, req: Request, reason: str) -> RequestOutput:
+        req.state = (RequestState.CANCELLED if reason == "cancelled"
+                     else RequestState.FINISHED)
+        req.finish_reason = reason
+        self.done.append(req)
+        out = RequestOutput(
+            rid=req.rid, token=None, index=len(req.tokens), state=req.state,
+            finished=True, finish_reason=reason, tokens=tuple(req.tokens))
+        if req.on_token:
+            req.on_token(out)
+        return out
+
+    # ------------------------------------------------------------------
+    # scheduling (admission policy — no model computation)
+    # ------------------------------------------------------------------
+    def _next_queued_index(self) -> int:
+        return min(range(len(self.queue)),
+                   key=lambda i: (-self.queue[i].priority,
+                                  self.queue[i]._seq))
+
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """Lowest-priority active slot strictly below `priority`; among
+        equals, the most recently admitted (least prefill to redo... the
+        newest has generated the least)."""
+        best = None
+        for slot, r in enumerate(self.active):
+            # only DECODING slots are evictable: a PREFILLING slot was
+            # admitted this very tick and its forward has not run yet
+            if (r is None or r.state is not RequestState.DECODING
+                    or r.priority >= priority):
+                continue
+            key = (r.priority, -r._admit_seq)
+            if best is None or key < best[0]:
+                best = (key, slot)
+        return None if best is None else best[1]
+
+    def _preempt(self, slot: int) -> None:
+        req = self.active[slot]
+        self.kv.release(slot)  # sharers keep refcounted pages alive
+        self.active[slot] = None
+        req.state = RequestState.QUEUED  # tokens kept: resume re-prefills
+        self.queue.append(req)  # _seq unchanged: keeps its FIFO standing
+
+    def schedule(self) -> List[Admission]:
+        """Admission policy: fill free slots from the queue, matching
+        shared prefixes and preempting lower-priority decoders under page
+        pressure.  Mutates allocator state (reservations, refcounts, fork
+        page ids) but runs NO model computation — ``prefill`` consumes
+        the returned admissions."""
+        admitted: List[Admission] = []
+        while self.queue:
+            qi = self._next_queued_index()
+            req = self.queue[qi]
+            effective = req.prompt + req.tokens  # resume covers generated
+            need = len(req.prompt) + req.sampling.max_new
+            match = (self.kv.match_prefix(effective)
+                     if self.prefix_sharing else NO_MATCH)
+            if match.defer:
+                break  # prefix pages materialize this tick; retry next
+            slot = next(
+                (i for i, r in enumerate(self.active) if r is None), None)
+            if slot is None or not self.kv.can_reserve(
+                    need, slot, n_shared=len(match.shared)):
+                victim = self._pick_victim(req.priority)
+                if victim is None:
+                    break  # page pressure: wait for retirements
+                self._preempt(victim)
+                continue  # re-match: the release may have dropped pages
+            self.queue.pop(qi)
+            forks = self.kv.reserve_shared(slot, match, need)
+            if self.prefix_sharing:
+                self.kv.register_prefix(slot, effective)
+            req.state = RequestState.PREFILLING
+            req.prefix_matched = match.matched
+            req._admit_seq = self._admissions
+            self._admissions += 1
+            self.active[slot] = req  # slot is taken from this point on
+            admitted.append(Admission(
+                slot, req, len(req.tokens), match.matched, tuple(forks)))
+        if not admitted and self.queue and all(
+                r is None for r in self.active):
+            req = self.queue[self._next_queued_index()]
+            raise MemoryError(
+                f"request {req.rid} needs "
+                f"{pages_for(len(req.prompt) + req.sampling.max_new, self.kv.page_size)}"
+                f" pages; pool has {self.kv.n_pages - 1}")
+        self.peak_pages = max(self.peak_pages, self.kv.used_pages)
+        return admitted
+
+    # ------------------------------------------------------------------
+    # prefill (batched, chunked, prefix-skipping)
+    # ------------------------------------------------------------------
     def _next_rng(self):
         self.rng, sub = jax.random.split(self.rng)
         return sub
 
-    # -- admission: batched (chunked) prefill into pages ---------------
-    def _admit(self):
-        admitted: List[tuple] = []
-        for slot in range(self.max_batch):
-            if self.active[slot] is not None or not self.queue:
-                continue
-            req = self.queue[0]
-            need = len(req.prompt) + req.max_new_tokens
-            if not self.kv.can_reserve(need, slot):
-                break  # page pressure: keep FIFO order, retry next tick
-            self.queue.pop(0)
-            self.kv.reserve(slot, need)  # whole request up front: decode
-            #                              can never hit pool-OOM mid-flight
-            admitted.append((slot, req))
+    def _sample(self, logits, per_slot):
+        """Per-request sampling for one tick.  The all-greedy case (the
+        default policy) short-circuits to a single argmax — no sorts, no
+        categorical, no rng split on the decode hot path."""
+        if all(sp.temperature <= 0.0 for _, sp in per_slot):
+            return np.asarray(S.greedy(logits))
+        temps = np.zeros(self.max_batch, np.float32)
+        top_ks = np.zeros(self.max_batch, np.int32)
+        top_ps = np.ones(self.max_batch, np.float32)
+        for slot, sp in per_slot:
+            temps[slot] = sp.temperature
+            top_ks[slot] = sp.top_k
+            top_ps[slot] = sp.top_p
+        return np.asarray(S.sample_step(
+            logits, self._next_rng(), jnp.asarray(temps),
+            jnp.asarray(top_ks), jnp.asarray(top_ps)))
+
+    def prefill(self, admitted: List[Admission]) -> List[RequestOutput]:
+        """Run the batched (chunked) prefill for this tick's admissions:
+        COW fork copies first, then one forward over every admitted
+        suffix at its true positions, then per-request first-token
+        sampling."""
+        events: List[RequestOutput] = []
         if not admitted:
-            if self.queue and all(r is None for r in self.active):
-                req = self.queue[0]  # nothing in flight will ever free pages
-                raise MemoryError(
-                    f"request {req.rid} needs "
-                    f"{pages_for(len(req.prompt) + req.max_new_tokens, self.kv.page_size)}"
-                    f" pages; pool has {self.kv.n_pages - 1}")
-            return
+            return events
+        for adm in admitted:  # copy shared boundary pages BEFORE writes
+            for src, dst in adm.forks:
+                self.caches = self._fork(
+                    self.caches, jnp.int32(src), jnp.int32(dst))
         bucket = self.cfg.prefill_chunk or PREFILL_BUCKET
-        maxp = max(len(r.prompt) for _, r in admitted)
-        s = min(-(-maxp // bucket) * bucket, self.max_len)
+        suffixes = {adm.slot: (adm.req.prompt + adm.req.tokens)[adm.matched:]
+                    for adm in admitted}
+        maxs = max(len(s) for s in suffixes.values())
+        s = min(-(-maxs // bucket) * bucket, self.max_len)
         tokens = np.zeros((self.max_batch, s), np.int32)
         lens = np.zeros(self.max_batch, np.int32)
-        temps = np.zeros(self.max_batch, np.float32)
-        for slot, req in admitted:
-            tokens[slot, :len(req.prompt)] = req.prompt
-            lens[slot] = len(req.prompt)
-            temps[slot] = req.temperature
+        offsets = np.zeros(self.max_batch, np.int32)
+        for adm in admitted:
+            suf = suffixes[adm.slot]
+            tokens[adm.slot, :len(suf)] = suf
+            lens[adm.slot] = adm.matched + len(suf)  # TOTAL valid length
+            offsets[adm.slot] = adm.matched
         # Non-admitted rows (inactive or mid-generation) are dummies: route
         # their padded-prompt writes to the trash page, NOT their own pages.
         pt = np.where(lens[:, None] > 0, self.kv.table, TRASH_PAGE)
-        batch = {"tokens": jnp.asarray(tokens), "lens": jnp.asarray(lens)}
+        batch = {"tokens": jnp.asarray(tokens), "lens": jnp.asarray(lens),
+                 "offsets": jnp.asarray(offsets)}
         logits, self.caches = self._prefill(
             self.params, batch, self.caches, jnp.asarray(pt))
-        first = np.asarray(
-            S.sample_batch(logits, self._next_rng(), jnp.asarray(temps)))
-        for slot, req in admitted:
-            req.tokens.append(int(first[slot]))
-            self.active[slot] = req
-            self.pos[slot] = len(req.prompt)
+        self.kv.commit_prefixes()  # registered prefixes now materialized
+        first = self._sample(
+            logits, [(adm.slot, adm.req.sampling) for adm in admitted])
+        for adm in admitted:
+            req = adm.req
+            self.active[adm.slot] = req
+            self.pos[adm.slot] = lens[adm.slot]
+            self.base[adm.slot] = adm.matched
+            req.state = RequestState.DECODING
+            events.append(self._append(adm.slot, req, int(first[adm.slot])))
+        return events
 
-    def _retire(self):
-        """Move finished requests out of their slots, freeing pages."""
-        for i, r in enumerate(self.active):
-            if r is None:
-                continue
-            if (len(r.tokens) >= r.max_new_tokens
-                    or self.pos[i] >= self.max_len - 1):
+    def _append(self, slot: int, req: Request, token: int) -> RequestOutput:
+        """Record one generated token, detect finish, emit the output."""
+        req.tokens.append(token)
+        reason = None
+        if token in req.sampling.stop:
+            reason = "stop"
+        elif (len(req.tokens) >= req.sampling.max_new
+              or self.pos[slot] >= self.max_len - 1):
+            reason = "length"
+        if reason is not None:
+            req.state = RequestState.FINISHED
+            req.finish_reason = reason
+        out = RequestOutput(
+            rid=req.rid, token=token, index=len(req.tokens),
+            state=req.state, finished=reason is not None,
+            finish_reason=reason, tokens=tuple(req.tokens))
+        if req.on_token:
+            req.on_token(out)
+        return out
+
+    def _retire(self) -> None:
+        """Free the slots of requests that finished this tick."""
+        for slot, r in enumerate(self.active):
+            if r is not None and r.state.is_terminal:
                 self.done.append(r)
-                self.active[i] = None
-                self.kv.release(i)
+                self.active[slot] = None
+                self.kv.release(slot)
 
     # ------------------------------------------------------------------
-    def step(self):
-        """One engine tick: admit new requests, decode all active slots."""
-        self._admit()
-        self._retire()  # e.g. max_new_tokens == 1: done at prefill
-        if not any(r is not None for r in self.active):
-            return False
+    # the engine tick
+    # ------------------------------------------------------------------
+    def step(self) -> List[RequestOutput]:
+        """One engine tick: schedule + prefill admissions, then decode
+        every active slot one token.  Returns this tick's streamed
+        outputs (empty when the engine is idle)."""
+        events = self.prefill(self.schedule())
+        self._retire()  # e.g. max_new == 1: finished at prefill
+        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
+        if not live:
+            return events
         tokens = np.zeros(self.max_batch, np.int32)
-        for i, r in enumerate(self.active):
-            if r is not None:
-                tokens[i] = r.tokens[-1]
+        for i, r in live:
+            tokens[i] = r.tokens[-1]
         pos = jnp.asarray(self.pos)
         kv_len = jnp.asarray(self.pos + 1)
         logits, self.caches = self._decode(
             self.params, jnp.asarray(tokens), pos, kv_len, self.caches,
-            jnp.asarray(self.kv.table))
-        nxt = S.greedy(logits)
-        nxt_host = np.asarray(nxt)
-        for i, r in enumerate(self.active):
-            if r is None:
-                continue
-            r.tokens.append(int(nxt_host[i]))
+            jnp.asarray(self.kv.table), jnp.asarray(self.base))
+        nxt = self._sample(logits, [(i, r.sampling) for i, r in live])
+        for i, r in live:
             self.pos[i] += 1
+            events.append(self._append(i, r, int(nxt[i])))
         self._retire()
-        return True
+        return events
 
-    def run(self):
-        while self.queue or any(r is not None for r in self.active):
-            self.step()
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    def stream(self, *requests: Request) -> Iterator[RequestOutput]:
+        """Submit `requests` (if given) and drive the engine, yielding
+        each generated token as a RequestOutput until the pool drains.
+        Token-for-token identical to ``run()`` — same ticks, same rng."""
+        for r in requests:
+            self.submit(r)
+        while self.has_work:
+            yield from self.step()
+
+    def run(self) -> List[Request]:
+        """Drain the engine; returns completed requests in finish order."""
+        for _ in self.stream():
+            pass
         return self.done

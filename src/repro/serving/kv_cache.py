@@ -21,16 +21,49 @@ pages — not a whole ``max_len`` slot reservation — are available.
 Physical page 0 is reserved as the TRASH page: page-table rows of inactive
 or padded slots point at it, so their (masked, never-read) cache writes land
 somewhere harmless instead of clobbering live sequences.
+
+Copy-on-write prefix sharing
+----------------------------
+
+Pages are REFCOUNTED: several slots may alias one physical page (a shared
+system-prompt prefix is prefilled once), and a page returns to the free
+list only when its last owner releases it.  Sharing is discovered by
+hash-based prefix matching at admission:
+
+  * every admitted prompt registers its full pages under a cumulative
+    chain key ``(parent_key, page_tokens)`` and its partial last page (if
+    any) under ``(chain_key, tail_tokens)``;
+  * ``match_prefix`` walks a new prompt down the chain, collecting the
+    longest registered prefix.  Fully-covered pages are attached
+    read-only (refcount++).  If the match ends mid-page — the page that
+    would receive this request's first KV write — that page is FORKED:
+    a fresh physical page is allocated and the engine copies the page's
+    contents device-side before prefill (copy-on-write, performed eagerly
+    at admission because the write is guaranteed).
+
+Shared pages are never written: a sharer's first computed position is
+``matched`` and full shared pages only cover positions below it, while
+the mid-page boundary case gets a private fork.  The match is always
+capped at ``len(prompt) - 1`` so at least one prompt token is computed
+(prefill needs a final hidden state to sample from).
+
+Pages registered in the CURRENT admission round are "pending" — their
+contents materialize only when the batched prefill runs — so a prompt
+matching a pending page reports ``defer=True`` and the engine retries
+next tick (one tick of latency buys chunked-prefill-safe sharing).
+There is no retention: a prefix is shareable only while some live slot
+still holds its pages.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import Dict, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
 
-__all__ = ["PagedKVCache", "TRASH_PAGE", "pages_for"]
+__all__ = ["PagedKVCache", "PrefixMatch", "NO_MATCH", "TRASH_PAGE",
+           "pages_for"]
 
 TRASH_PAGE = 0  # physical page 0 is never allocated
 
@@ -40,13 +73,26 @@ def pages_for(n_tokens: int, page_size: int) -> int:
     return -(-max(n_tokens, 0) // page_size)
 
 
+class PrefixMatch(NamedTuple):
+    """Result of hash-matching a prompt against the registered prefixes."""
+
+    matched: int  # tokens covered by shared pages (+ fork), < len(prompt)
+    shared: Tuple[int, ...]  # full pages attached read-only (refcount++)
+    fork_src: Optional[int]  # page to copy-on-write fork, or None
+    defer: bool  # prefix registered this tick but not yet prefilled
+
+
+NO_MATCH = PrefixMatch(0, (), None, False)
+
+
 @dataclasses.dataclass
 class PagedKVCache:
     """Host-side page-table + free-list allocator over the device pools.
 
     The device-side pools themselves live with the engine (they are jitted
     function state); this object owns which physical page belongs to which
-    slot and hands out / reclaims pages.
+    slot, hands out / reclaims pages, and tracks refcounts + the prefix
+    registry for copy-on-write page sharing.
     """
 
     n_pages: int
@@ -62,6 +108,15 @@ class PagedKVCache:
         self._owned: List[List[int]] = [[] for _ in range(self.max_batch)]
         self.table = np.full((self.max_batch, self.max_pages_per_seq),
                              TRASH_PAGE, np.int32)
+        # page_refs[p] == number of slots whose page table references p;
+        # 0 <=> p is free (or the trash page).
+        self.page_refs = np.zeros(self.n_pages, np.int32)
+        # prefix registry: chain key -> page (full pages), and
+        # (chain key, tail tokens) -> (page, rows) for a partial last page.
+        self._prefix: Dict[tuple, int] = {}
+        self._tail: Dict[tuple, Tuple[int, int]] = {}
+        self._page_keys: Dict[int, List[tuple]] = {}  # page -> registry keys
+        self._pending: Set[int] = set()  # registered, not yet prefilled
 
     # -- capacity ------------------------------------------------------
     @property
@@ -70,14 +125,22 @@ class PagedKVCache:
 
     @property
     def used_pages(self) -> int:
+        """UNIQUE physical pages in use (shared pages count once)."""
         return (self.n_pages - 1) - len(self._free)
 
-    def can_reserve(self, n_tokens: int, slot: int | None = None) -> bool:
-        """Can a (possibly partially-grown) slot cover n_tokens total?"""
+    @property
+    def shared_pages(self) -> int:
+        """Physical pages currently referenced by more than one slot."""
+        return int(np.sum(self.page_refs > 1))
+
+    def can_reserve(self, n_tokens: int, slot: int | None = None,
+                    n_shared: int = 0) -> bool:
+        """Can a (possibly partially-grown) slot cover n_tokens total,
+        with ``n_shared`` of its pages attached from the prefix cache?"""
         need = pages_for(n_tokens, self.page_size)
         if need > self.max_pages_per_seq:  # reserve() would refuse
             return False
-        have = len(self._owned[slot]) if slot is not None else 0
+        have = (len(self._owned[slot]) if slot is not None else 0) + n_shared
         return need - have <= len(self._free)
 
     # -- alloc / free --------------------------------------------------
@@ -95,14 +158,167 @@ class PagedKVCache:
                     f"page pool exhausted growing slot {slot} to "
                     f"{n_tokens} tokens")
             page = self._free.pop()
+            self.page_refs[page] = 1
             self.table[slot, len(owned)] = page
             owned.append(page)
 
     def release(self, slot: int) -> None:
-        """Return all of `slot`'s pages to the free list."""
-        self._free.extend(reversed(self._owned[slot]))
+        """Return `slot`'s page references; free pages that hit refcount 0.
+
+        Releasing a slot that owns nothing is a LOUD error — it means the
+        engine double-released or released a slot it never reserved, and
+        silently ignoring it would let page-accounting bugs slide until
+        two sequences alias the same page.
+        """
+        if not 0 <= slot < self.max_batch:
+            raise ValueError(
+                f"release of unknown slot {slot} (max_batch={self.max_batch})")
+        owned = self._owned[slot]
+        if not owned:
+            raise ValueError(
+                f"release of slot {slot} which owns no pages "
+                "(double release, or a slot that was never reserved)")
+        freed: List[int] = []
+        for page in owned:
+            self.page_refs[page] -= 1
+            if self.page_refs[page] == 0:
+                for kind, key in self._page_keys.pop(page, ()):
+                    (self._prefix if kind == "full" else self._tail).pop(
+                        key, None)
+                self._pending.discard(page)
+                freed.append(page)
+        self._free.extend(reversed(freed))
         self._owned[slot] = []
         self.table[slot, :] = TRASH_PAGE
 
     def owned(self, slot: int) -> List[int]:
         return list(self._owned[slot])
+
+    # -- copy-on-write prefix sharing ----------------------------------
+    def match_prefix(self, prompt: List[int]) -> PrefixMatch:
+        """Longest registered prefix of ``prompt`` (capped at len-1).
+
+        Walks the cumulative chain key over full page_size chunks, then
+        tries the registered partial tails of the last matched chain node.
+        Touching a page whose prefill has not run yet reports
+        ``defer=True`` (admit next tick instead of reading unwritten KV).
+        """
+        ps = self.page_size
+        plen = len(prompt)
+        if plen <= 1:
+            return NO_MATCH
+        key = None
+        chain: List[int] = []
+        for i in range(plen // ps):
+            nxt = (key, tuple(prompt[i * ps:(i + 1) * ps]))
+            page = self._prefix.get(nxt)
+            if page is None:
+                break
+            if page in self._pending:
+                return PrefixMatch(0, (), None, True)
+            key = nxt
+            chain.append(page)
+        raw = len(chain) * ps
+        # longest registered boundary entry that prefixes the remainder
+        # (valid at ANY chain node: the entry claims rows [0, length) of
+        # its page hold the KV of exactly these tokens at these positions)
+        rem = prompt[raw:]
+        for length in range(min(len(rem), ps - 1), 0, -1):
+            hit = self._tail.get((key, tuple(rem[:length])))
+            if hit is None:
+                continue
+            page, rows = hit
+            if page in self._pending:
+                return PrefixMatch(0, (), None, True)
+            chain.append(page)
+            raw += rows
+            break
+        if raw == 0:
+            return NO_MATCH
+        matched = min(raw, plen - 1)  # always compute >= 1 prompt token
+        n_share = matched // ps
+        fork = chain[n_share] if matched % ps else None
+        return PrefixMatch(matched, tuple(chain[:n_share]), fork, False)
+
+    def reserve_shared(self, slot: int, match: PrefixMatch,
+                       n_tokens: int) -> List[Tuple[int, int]]:
+        """Reserve `slot` for n_tokens, attaching the matched prefix.
+
+        Shared full pages are aliased (refcount++); a mid-page match
+        allocates a private fork page and returns [(src, dst)] so the
+        engine can copy the page contents device-side BEFORE prefill.
+        The remainder of the reservation comes from the free list.
+        """
+        if self._owned[slot]:
+            raise ValueError(
+                f"reserve_shared on slot {slot} which already owns pages")
+        if match.defer:
+            raise ValueError("cannot reserve a deferred prefix match")
+        need = pages_for(n_tokens, self.page_size)
+        if need > self.max_pages_per_seq:
+            raise ValueError(
+                f"sequence of {n_tokens} tokens needs {need} pages > "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        if need - len(match.shared) > len(self._free):
+            raise MemoryError(
+                f"page pool exhausted reserving slot {slot} "
+                f"({need} pages, {len(match.shared)} shared)")
+        owned = self._owned[slot]
+        for page in match.shared:
+            self.table[slot, len(owned)] = page
+            self.page_refs[page] += 1
+            owned.append(page)
+        forks: List[Tuple[int, int]] = []
+        if match.fork_src is not None:
+            dst = self._free.pop()
+            self.page_refs[dst] = 1
+            self.table[slot, len(owned)] = dst
+            owned.append(dst)
+            forks.append((match.fork_src, dst))
+        self.reserve(slot, n_tokens)
+        return forks
+
+    def register_prefix(self, slot: int, prompt: List[int]) -> None:
+        """Publish `slot`'s prompt pages into the prefix registry
+        (first registration of a key wins — later identical prompts
+        alias the original pages).  Entries stay PENDING until
+        ``commit_prefixes`` marks this round's prefill done.
+
+        Full pages get one chain key each.  The LAST page additionally
+        registers every prefix of its contents as a fork point, so a
+        later prompt that shares only the first L rows of that page
+        (common system prompt, divergent suffix) can COW-fork it instead
+        of losing the whole partial page to recompute.
+        """
+        ps = self.page_size
+        owned = self._owned[slot]
+        full, rows = len(prompt) // ps, len(prompt) % ps
+        keys = [None]  # chain key after i full pages
+        for i in range(full):
+            keys.append((keys[i], tuple(prompt[i * ps:(i + 1) * ps])))
+            if keys[i + 1] in self._prefix:
+                continue
+            page = owned[i]
+            self._prefix[keys[i + 1]] = page
+            self._page_keys.setdefault(page, []).append(("full", keys[i + 1]))
+            self._pending.add(page)
+        if rows:  # partial tail page: its prefixes, tail length included
+            node, start, page = keys[full], full * ps, owned[full]
+            lengths = range(1, rows + 1)
+        elif full:  # page-aligned prompt: proper prefixes of the last page
+            node, start, page = keys[full - 1], (full - 1) * ps, owned[full - 1]
+            lengths = range(1, ps)
+        else:
+            return
+        for length in lengths:
+            tkey = (node, tuple(prompt[start:start + length]))
+            if tkey in self._tail:
+                continue
+            self._tail[tkey] = (page, length)
+            self._page_keys.setdefault(page, []).append(("tail", tkey))
+            self._pending.add(page)
+
+    def commit_prefixes(self) -> None:
+        """Mark this admission round's registered pages as materialized
+        (their batched prefill has been dispatched)."""
+        self._pending.clear()

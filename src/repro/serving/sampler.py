@@ -1,37 +1,86 @@
-"""Token samplers for the serving engine."""
+"""Token samplers for the serving engine.
+
+``sample_step`` is the engine's per-tick entry point: every row of the
+decode batch carries its own temperature / top-k / top-p (the per-request
+``SamplingParams``), vectorized so one call covers the whole batch.
+``apply_top_k`` / ``apply_top_p`` are the row-wise logit filters, exposed
+separately so tests can pin them against a reference implementation.
+"""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-__all__ = ["greedy", "sample", "sample_batch"]
+__all__ = ["greedy", "sample", "sample_step", "apply_top_k", "apply_top_p"]
+
+_MASKED = -1e9  # filtered logits (matches the vocab-padding mask value)
 
 
 def greedy(logits: jax.Array) -> jax.Array:
     return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
 
+def apply_top_k(logits: jax.Array, k) -> jax.Array:
+    """Keep each row's k highest logits, mask the rest to -1e9.
+
+    logits: (..., V); k: scalar or (...,) int32 — 0 disables the filter
+    for that row.
+    """
+    v = logits.shape[-1]
+    k = jnp.broadcast_to(jnp.asarray(k, jnp.int32), logits.shape[:-1])
+    eff = jnp.where(k > 0, jnp.minimum(k, v), v)
+    srt = jnp.sort(logits, axis=-1)[..., ::-1]  # descending
+    kth = jnp.take_along_axis(srt, (eff - 1)[..., None], axis=-1)
+    return jnp.where(logits < kth, _MASKED, logits)
+
+
+def apply_top_p(logits: jax.Array, p) -> jax.Array:
+    """Nucleus filter: keep each row's smallest high-probability set whose
+    cumulative softmax mass reaches p, mask the rest to -1e9.
+
+    logits: (..., V); p: scalar or (...,) float — the top-1 token is
+    always kept; p >= 1.0 keeps every token with nonzero probability.
+    Ties break by stable descending sort, matching a numpy
+    ``argsort(-x, kind="stable")`` reference.
+    """
+    p = jnp.broadcast_to(jnp.asarray(p, jnp.float32),
+                         logits.shape[:-1])[..., None]
+    idx = jnp.argsort(-logits, axis=-1)  # stable descending
+    sl = jnp.take_along_axis(logits, idx, axis=-1)
+    sp = jax.nn.softmax(sl, axis=-1)
+    cum = jnp.cumsum(sp, axis=-1)
+    keep = (cum - sp) < p  # mass BEFORE this token is still short of p
+    masked = jnp.where(keep, sl, _MASKED)
+    inv = jnp.argsort(idx, axis=-1)  # inverse permutation
+    return jnp.take_along_axis(masked, inv, axis=-1)
+
+
 def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 1.0,
-           top_k: int = 0) -> jax.Array:
-    """Temperature + optional top-k sampling. logits: (B, V)."""
+           top_k: int = 0, top_p: float = 1.0) -> jax.Array:
+    """Single-policy sampling (python scalars). logits: (B, V)."""
     if temperature <= 0.0:
         return greedy(logits)
     l = logits / temperature
     if top_k:
-        kth = jax.lax.top_k(l, top_k)[0][..., -1:]
-        l = jnp.where(l < kth, -1e9, l)
+        l = apply_top_k(l, top_k)
+    if top_p < 1.0:
+        l = apply_top_p(l, top_p)
     return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
 
 
-def sample_batch(logits: jax.Array, rng: jax.Array,
-                 temperatures: jax.Array) -> jax.Array:
-    """Per-row temperature sampling for a batched prefill.
+def sample_step(logits: jax.Array, rng: jax.Array, temperature, top_k,
+                top_p) -> jax.Array:
+    """Per-row sampling for one engine tick.
 
-    logits: (B, V); temperatures: (B,) — rows with temperature <= 0 are
-    greedy, the rest are categorical at their own temperature.
+    logits: (B, V); temperature/top_k/top_p: (B,) arrays from each slot's
+    ``SamplingParams``.  Rows with temperature <= 0 are greedy (their
+    top-k/top-p values are ignored); the rest filter then draw
+    categorically at their own temperature.
     """
-    t = jnp.asarray(temperatures, jnp.float32)
+    g = greedy(logits)
+    t = jnp.asarray(temperature, jnp.float32)
     safe_t = jnp.where(t > 0, t, 1.0)[:, None]
-    samp = jax.random.categorical(rng, logits / safe_t, axis=-1)
-    return jnp.where(t > 0, samp.astype(jnp.int32), greedy(logits))
+    l = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
+    c = jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+    return jnp.where(t > 0, c, g)

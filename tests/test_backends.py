@@ -4,6 +4,9 @@ backend policy — mixed dense/camformer stacks must round-trip cache
 specs, prefill, decode, and serve end-to-end through the single paged
 ServeEngine with both page layouts live in the same pool."""
 
+import argparse
+import warnings
+
 import jax
 import jax.numpy as jnp
 import pytest
@@ -11,9 +14,10 @@ import pytest
 from repro.configs import smoke_config
 from repro.core.backend import (AttentionBackend, get_backend, list_backends,
                                 register_backend)
+from repro.launch.cli import add_backend_args, apply_backend_args
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, SamplingParams, ServeEngine
 
 _IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
                       and isinstance(x[0], jax.ShapeDtypeStruct))
@@ -51,6 +55,37 @@ def test_registry_round_trip():
 
     register_backend(_Probe())
     assert get_backend("probe").name == "probe"
+
+
+def test_attn_mode_alias_warns_and_conflicts_raise():
+    """The deprecation contract of the seed-era spelling: setting
+    attn_mode still WORKS (resolves through cfg.backend) but emits a
+    DeprecationWarning at config construction, and a disagreeing
+    attn_mode + attn_backend pair is a loud error, never a silent
+    precedence."""
+    cfg = smoke_config("codeqwen1.5-7b")
+    with pytest.warns(DeprecationWarning, match="attn_mode"):
+        aliased = cfg.replace(attn_mode="camformer")
+    assert aliased.backend == "camformer"
+    assert aliased.backend_for(0) == "camformer"
+    with pytest.raises(ValueError, match="conflicting"):
+        cfg.replace(attn_mode="binary", attn_backend="camformer")
+    # the canonical spelling stays silent
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert cfg.replace(attn_backend="binary").backend == "binary"
+
+
+def test_cli_attn_mode_alias_warns_and_conflicts_exit():
+    ap = argparse.ArgumentParser()
+    add_backend_args(ap)
+    args = ap.parse_args(["--attn-mode", "camformer"])
+    with pytest.warns(DeprecationWarning, match="--attn-mode"):
+        cfg = apply_backend_args(smoke_config("codeqwen1.5-7b"), args)
+    assert cfg.backend == "camformer"
+    args = ap.parse_args(["--attn-mode", "binary", "--backend", "camformer"])
+    with pytest.raises(SystemExit, match="conflicting"):
+        apply_backend_args(smoke_config("codeqwen1.5-7b"), args)
 
 
 def test_config_backend_resolution_and_alias():
@@ -203,7 +238,7 @@ def test_mixed_layer_engine_serves_with_both_page_layouts():
     assert set(eng.caches[0]) == {"k_pages", "v_pages"}
     assert set(eng.caches[1]) == {"kp_pages", "v_pages", "k_scale"}
     for i, p in enumerate(prompts):
-        eng.submit(Request(prompt=list(p), max_new_tokens=new, rid=i))
+        eng.submit(Request(prompt=list(p), sampling=SamplingParams(max_new=new), rid=i))
     done = eng.run()
     got = {r.rid: r.tokens for r in done}
     assert got == want

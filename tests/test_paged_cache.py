@@ -17,7 +17,7 @@ from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, SamplingParams, ServeEngine
 from repro.serving.kv_cache import TRASH_PAGE, PagedKVCache, pages_for
 
 _IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
@@ -72,6 +72,99 @@ def test_allocator_churn_conserves_pages():
             assert list(kv.table[s, :len(o)]) == o
             assert (kv.table[s, len(o):] == TRASH_PAGE).all()
     for s in list(live):
+        kv.release(s)
+    assert kv.free_pages == total
+
+
+def test_allocator_release_unowned_is_loud():
+    """release() of a slot that owns nothing is an allocator-accounting
+    bug (double release / never-reserved slot) and must raise, not
+    silently no-op."""
+    kv = PagedKVCache(n_pages=9, page_size=8, max_batch=4,
+                      max_pages_per_seq=4)
+    with pytest.raises(ValueError, match="owns no pages"):
+        kv.release(0)  # never reserved
+    with pytest.raises(ValueError, match="unknown slot"):
+        kv.release(7)  # out of range
+    kv.reserve(0, 10)
+    kv.release(0)
+    with pytest.raises(ValueError, match="owns no pages"):
+        kv.release(0)  # double release
+    assert kv.free_pages == kv.n_pages - 1
+
+
+def test_allocator_release_while_shared_keeps_pages_live():
+    """Refcounted release: a shared page survives its first owner's
+    release and is freed only when the LAST owner releases it."""
+    kv = PagedKVCache(n_pages=9, page_size=4, max_batch=3,
+                      max_pages_per_seq=4)
+    prompt = list(range(10))  # 2 full pages + 2-row tail
+    kv.reserve(0, len(prompt) + 2)
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    m = kv.match_prefix(prompt + [77])
+    assert m.matched == 10 and len(m.shared) == 2 and m.fork_src is not None
+    forks = kv.reserve_shared(1, m, 13)
+    assert forks == [(kv.owned(0)[2], kv.owned(1)[2])]
+    shared = kv.owned(0)[:2]
+    assert kv.owned(1)[:2] == shared
+    assert all(kv.page_refs[p] == 2 for p in shared)
+    total_used = kv.used_pages
+    kv.release(0)  # sharer keeps the prefix pages alive
+    assert all(kv.page_refs[p] == 1 for p in shared)
+    assert kv.used_pages == total_used - 1  # only slot 0's private tail page
+    with pytest.raises(ValueError, match="owns no pages"):
+        kv.release(0)  # double release after a shared release
+    # the surviving owner can still be matched against
+    m2 = kv.match_prefix(prompt[:8] + [1, 2, 3])
+    assert m2.matched == 8 and tuple(m2.shared) == tuple(shared)
+    kv.release(1)
+    assert kv.free_pages == kv.n_pages - 1
+    assert kv.match_prefix(prompt + [77]).matched == 0  # registry swept
+
+
+def test_allocator_churn_with_sharing_conserves_pages():
+    """Allocator-churn regression over the refcount/COW surface: random
+    reserve / shared-reserve / release cycles never leak or double-free
+    pages, and page_refs always equals the number of owning slots."""
+    rng = np.random.default_rng(1)
+    kv = PagedKVCache(n_pages=25, page_size=4, max_batch=5,
+                      max_pages_per_seq=6)
+    total = kv.free_pages
+    prompts = {}
+    for it in range(400):
+        slot = int(rng.integers(0, 5))
+        if slot in prompts:
+            if rng.random() < 0.5:
+                kv.release(slot)
+                del prompts[slot]
+        else:
+            plen = int(rng.integers(1, 15))
+            first = int(rng.integers(0, 3))  # small alphabet: real overlaps
+            prompt = [first] + list(map(int, rng.integers(0, 3, plen - 1)))
+            need = plen + 4
+            m = kv.match_prefix(prompt)
+            if m.defer or not kv.can_reserve(need, slot,
+                                             n_shared=len(m.shared)):
+                continue
+            kv.reserve_shared(slot, m, need)
+            kv.register_prefix(slot, prompt)
+            kv.commit_prefixes()
+            prompts[slot] = prompt
+        # invariants after every op
+        refs = np.zeros(kv.n_pages, np.int64)
+        for s in range(5):
+            for p in kv.owned(s):
+                refs[p] += 1
+        assert (refs == kv.page_refs).all()
+        assert refs[TRASH_PAGE] == 0
+        unique = {p for s in range(5) for p in kv.owned(s)}
+        assert kv.free_pages + len(unique) == total
+        for s in range(5):  # table rows mirror ownership
+            o = kv.owned(s)
+            assert list(kv.table[s, :len(o)]) == o
+            assert (kv.table[s, len(o):] == TRASH_PAGE).all()
+    for s in list(prompts):
         kv.release(s)
     assert kv.free_pages == total
 
@@ -239,7 +332,7 @@ def test_paged_engine_matches_contiguous_reference(backend):
     eng = ServeEngine(md, cfg, params, max_batch=3, max_len=64, page_size=8,
                       n_pages=1 + 3 * 4)
     for i, p in enumerate(prompts):
-        eng.submit(Request(prompt=list(p), max_new_tokens=new, rid=i))
+        eng.submit(Request(prompt=list(p), sampling=SamplingParams(max_new=new), rid=i))
     done = eng.run()
     got = {r.rid: r.tokens for r in done}
     assert got == want
@@ -260,7 +353,7 @@ def test_paged_engine_page_pressure_queues_and_completes(backend):
                [5, 5, 8, 1, 9, 2, 7, 7, 3, 1],  # > chunk: chunked prefill
                [6, 5, 8, 1]]
     for i, p in enumerate(prompts):
-        eng.submit(Request(prompt=p, max_new_tokens=8, rid=i))
+        eng.submit(Request(prompt=p, sampling=SamplingParams(max_new=8), rid=i))
     done = eng.run()
     assert len(done) == 4
     assert all(len(r.tokens) == 8 for r in done)
@@ -272,9 +365,9 @@ def test_paged_engine_single_token_request():
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32, page_size=8)
-    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=1, rid=0))
+    eng.submit(Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=1), rid=0))
     with pytest.raises(ValueError):
-        eng.submit(Request(prompt=[], max_new_tokens=4, rid=1))
+        eng.submit(Request(prompt=[], sampling=SamplingParams(max_new=4), rid=1))
     done = eng.run()
     assert len(done) == 1 and len(done[0].tokens) == 1  # exactly max_new
 
@@ -285,6 +378,6 @@ def test_paged_engine_oversized_request_raises():
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8,
                       n_pages=3)  # 2 usable pages = 16 tokens
-    eng.submit(Request(prompt=[1, 2, 3], max_new_tokens=30, rid=0))
+    eng.submit(Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=30), rid=0))
     with pytest.raises(MemoryError):
         eng.run()

@@ -1,0 +1,442 @@
+"""Production serving API: sampling params (top-p pinned to a numpy
+reference), request lifecycle, streamed outputs vs batch run()
+(same-path, token-for-token at temperature 0 across backends incl. a
+mixed per-layer policy), cancellation, stop tokens, priority preemption,
+and copy-on-write prefix sharing (page savings + fork isolation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import (Request, RequestState, SamplingParams,
+                           ServeEngine)
+from repro.serving import sampler as S
+
+_SLOW = pytest.mark.slow
+
+
+def _cfg(backend=None, layer_backends=None, **kw):
+    cfg = smoke_config("codeqwen1.5-7b")
+    if layer_backends:
+        kw["n_layers"] = max(cfg.n_layers, len(layer_backends))
+    return cfg.replace(attn_backend=backend, layer_backends=layer_backends,
+                       **kw)
+
+
+def _engine(cfg, **kw):
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    return ServeEngine(md, cfg, params, **kw)
+
+
+# ---------------------------------------------------------------------------
+# sampling params + samplers
+
+
+def test_sampling_params_validation():
+    SamplingParams(temperature=0.7, top_k=40, top_p=0.9, stop=(1, 2),
+                   max_new=4)
+    with pytest.raises(ValueError):
+        SamplingParams(temperature=-0.1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_k=-1)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=0.0)
+    with pytest.raises(ValueError):
+        SamplingParams(top_p=1.5)
+    with pytest.raises(ValueError):
+        SamplingParams(max_new=0)
+    assert SamplingParams(stop=[3, 4]).stop == (3, 4)  # list coerces
+
+
+def _np_nucleus_mask(logits, p):
+    """Independent numpy reference: per row, walk tokens in (stable)
+    descending-probability order, keeping until the cumulative mass
+    reaches p; everything else is filtered."""
+    e = np.exp(logits - logits.max(axis=-1, keepdims=True))
+    probs = e / e.sum(axis=-1, keepdims=True)
+    keep = np.zeros(logits.shape, bool)
+    for b in range(logits.shape[0]):
+        cum = 0.0
+        for i in np.argsort(-logits[b], kind="stable"):
+            keep[b, i] = True
+            cum += probs[b, i]
+            if cum >= p:
+                break
+    return keep
+
+
+@pytest.mark.parametrize("p", [0.1, 0.5, 0.9, 0.999])
+def test_top_p_matches_numpy_reference(p):
+    logits = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(3), (7, 53)) * 2.0, np.float32)
+    got = np.asarray(S.apply_top_p(jnp.asarray(logits), p))
+    keep = _np_nucleus_mask(logits, p)
+    # kept logits pass through untouched; filtered ones are masked hard
+    assert np.array_equal(got > -1e8, keep)
+    assert np.allclose(np.where(keep, logits, 0.0),
+                       np.where(keep, got, 0.0))
+    # the renormalized kept distribution matches the numpy reference
+    def norm(l):
+        e = np.exp(np.where(keep, l - l.max(-1, keepdims=True), -np.inf))
+        return e / e.sum(-1, keepdims=True)
+    assert np.allclose(norm(got), norm(logits), atol=1e-6)
+    # sampling stays inside the nucleus
+    draws = np.asarray(jax.random.categorical(
+        jax.random.PRNGKey(5), jnp.asarray(got), axis=-1,
+        shape=(64,) + got.shape[:1]))
+    assert all(keep[b, t] for row in draws for b, t in enumerate(row))
+
+
+def test_top_k_and_sample_step_per_row_policies():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (5, 31)) * 3.0
+    # per-row k: row 0 disabled, others keep exactly k survivors
+    ks = jnp.asarray([0, 1, 3, 7, 31])
+    masked = np.asarray(S.apply_top_k(logits, ks))
+    counts = (masked > -1e8).sum(-1)
+    assert list(counts) == [31, 1, 3, 7, 31]
+    # sample_step: temperature<=0 rows are greedy regardless of rng;
+    # temperature>0 with top_k=1 still pins to the argmax
+    temps = jnp.asarray([0.0, 1.0, 0.0, 2.0, 1.5])
+    ks = jnp.asarray([0, 1, 5, 1, 0])
+    ps = jnp.asarray([1.0, 1.0, 0.9, 1.0, 0.5])
+    out = np.asarray(S.sample_step(logits, jax.random.PRNGKey(0), temps, ks,
+                                   ps))
+    g = np.asarray(S.greedy(logits))
+    assert out[0] == g[0] and out[2] == g[2]  # greedy rows
+    assert out[1] == g[1] and out[3] == g[3]  # top_k=1 rows
+    # top-p row stays inside its own nucleus
+    keep = _np_nucleus_mask(np.asarray(logits / 1.5), 0.5)
+    assert keep[4, out[4]]
+
+
+# ---------------------------------------------------------------------------
+# lifecycle
+
+
+def test_request_lifecycle_states_and_scheduler_separation():
+    eng = _engine(_cfg())
+    req = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=3))
+    rid = eng.submit(req)
+    assert rid == 0 and req.state is RequestState.QUEUED
+    admitted = eng.schedule()  # admission policy alone: no model compute
+    assert [a.req for a in admitted] == [req]
+    assert req.state is RequestState.PREFILLING
+    assert eng.kv.owned(admitted[0].slot)  # pages reserved up front
+    events = eng.prefill(admitted)
+    assert req.state is RequestState.DECODING
+    assert len(events) == 1 and events[0].token == req.tokens[0]
+    eng.run()
+    assert req.state is RequestState.FINISHED
+    assert req.finish_reason == "length" and len(req.tokens) == 3
+    assert eng.kv.free_pages == eng.kv.n_pages - 1
+
+
+def test_submit_validation_and_auto_rid():
+    eng = _engine(_cfg())
+    assert eng.submit(Request(prompt=[1])) == 0
+    assert eng.submit(Request(prompt=[1], rid=7)) == 7
+    assert eng.submit(Request(prompt=[1])) == 8  # auto ids skip used ones
+    with pytest.raises(ValueError, match="empty prompt"):
+        eng.submit(Request(prompt=[]))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=[1, 2],
+                           sampling=SamplingParams(max_new=63)))
+
+
+def test_stop_tokens_finish_early():
+    eng = _engine(_cfg())
+    probe = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=6))
+    eng.submit(probe)
+    eng.run()
+    stop_tok = probe.tokens[2]
+    eng2 = _engine(_cfg())
+    req = Request(prompt=[5, 9, 2],
+                  sampling=SamplingParams(max_new=6, stop=(stop_tok,)))
+    eng2.submit(req)
+    eng2.run()
+    assert req.finish_reason == "stop"
+    assert req.tokens == probe.tokens[:3]  # stop token kept in the output
+    assert eng2.kv.free_pages == eng2.kv.n_pages - 1
+
+
+def test_cancel_queued_and_active_frees_pages_immediately():
+    eng = _engine(_cfg(), max_batch=1)
+    a = Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=12))
+    b = Request(prompt=[4, 5, 6], sampling=SamplingParams(max_new=12))
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()  # a active, b queued
+    out = eng.cancel(b.rid)
+    assert out.finished and b.state is RequestState.CANCELLED
+    n_before = len(a.tokens)
+    out = eng.cancel(a.rid)
+    assert a.state is RequestState.CANCELLED
+    assert out.tokens == tuple(a.tokens) and len(a.tokens) == n_before
+    assert eng.kv.free_pages == eng.kv.n_pages - 1  # freed NOW, not at drain
+    assert eng.cancel(99) is None
+    assert eng.run() == [b, a]  # both surfaced as done, no decode work left
+
+
+def test_on_token_callback_streams_every_token():
+    eng = _engine(_cfg())
+    got = {}
+    reqs = [Request(prompt=[5, 9, 2 + i],
+                    sampling=SamplingParams(max_new=4),
+                    on_token=lambda o: got.setdefault(o.rid, []).append(o))
+            for i in range(2)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r in reqs:
+        outs = got[r.rid]
+        assert [o.token for o in outs] == r.tokens
+        assert [o.index for o in outs] == [1, 2, 3, 4]
+        assert [o.finished for o in outs] == [False, False, False, True]
+        assert outs[-1].finish_reason == "length"
+        assert outs[-1].tokens == tuple(r.tokens)
+
+
+# ---------------------------------------------------------------------------
+# streaming == batch run (same-path comparison, per decode tolerance policy:
+# identical code path -> exact token equality for every backend)
+
+
+@pytest.mark.parametrize("backend,layer_backends", [
+    ("dense", None),
+    pytest.param("camformer", None, marks=_SLOW),
+    pytest.param(None, ("dense", "camformer"), marks=_SLOW),
+])
+def test_stream_matches_batch_run_token_for_token(backend, layer_backends):
+    cfg = _cfg(backend, layer_backends)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    shared = list(range(30, 42))  # common prefix: exercises COW sharing
+    prompts = [shared + [i, i + 2] for i in (3, 7)] + [[9, 1, 4], [2, 2]]
+    sp = SamplingParams(max_new=5)
+
+    def reqs():
+        return [Request(prompt=list(p), sampling=sp, rid=i)
+                for i, p in enumerate(prompts)]
+
+    eng_run = ServeEngine(md, cfg, params, max_batch=3, max_len=64,
+                          page_size=8)
+    for r in reqs():
+        eng_run.submit(r)
+    want = {r.rid: r.tokens for r in eng_run.run()}
+
+    eng_stream = ServeEngine(md, cfg, params, max_batch=3, max_len=64,
+                             page_size=8)
+    got = {}
+    finished = {}
+    for out in eng_stream.stream(*reqs()):
+        got.setdefault(out.rid, []).append(out.token)
+        finished[out.rid] = out.finished
+    assert got == want  # token-for-token at temperature 0
+    assert all(finished.values())
+    assert eng_stream.kv.free_pages == eng_stream.kv.n_pages - 1
+
+
+def test_per_request_sampling_policies_in_one_batch():
+    eng = _engine(_cfg())
+    greedy = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=6))
+    hot = Request(prompt=[5, 9, 2],
+                  sampling=SamplingParams(temperature=1.2, top_k=11,
+                                          top_p=0.9, max_new=4))
+    short = Request(prompt=[7, 1], sampling=SamplingParams(max_new=1))
+    for r in (greedy, hot, short):
+        eng.submit(r)
+    eng.run()
+    assert len(greedy.tokens) == 6 and len(hot.tokens) == 4
+    assert len(short.tokens) == 1  # finished at prefill
+    ref = _engine(_cfg())
+    solo = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=6))
+    ref.submit(solo)
+    ref.run()
+    assert greedy.tokens == solo.tokens  # hot neighbor never perturbs greedy
+    assert all(0 <= t < eng.cfg.vocab for t in hot.tokens)
+
+
+# ---------------------------------------------------------------------------
+# COW prefix sharing
+
+
+def test_prefix_sharing_saves_pages_and_keeps_tokens_identical():
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    system = list(range(40, 60))  # 20 tokens: 2 full pages + 4-row tail
+    prompts = [system + [i, i + 1] for i in (3, 7, 11)]
+    sp = SamplingParams(max_new=5)
+
+    def gen(share):
+        eng = ServeEngine(md, cfg, params, max_batch=4, max_len=64,
+                          page_size=8, prefix_sharing=share)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=list(p), sampling=sp, rid=i))
+        done = eng.run()
+        assert eng.kv.free_pages == eng.kv.n_pages - 1
+        return {r.rid: r.tokens for r in done}, eng.peak_pages
+
+    want, peak_independent = gen(False)
+    got, peak_shared = gen(True)
+    assert got == want  # aliased pages hold identical KV (dense: exact)
+    assert peak_shared < peak_independent
+
+
+def test_cow_fork_mutation_leaves_sibling_decode_unchanged():
+    """Mutate one fork's page contents mid-flight: the request owning the
+    fork goes off the rails, its sibling (sharing the ancestor pages)
+    decodes exactly as an unmutated control engine — proof the fork is a
+    private copy, not an alias."""
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    system = list(range(40, 60))
+    pa, pb = system + [3, 4], system + [7, 8]
+    sp = SamplingParams(max_new=8)
+
+    def engines():
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64,
+                          page_size=8)
+        a = Request(prompt=list(pa), sampling=sp, rid=0)
+        eng.submit(a)
+        eng.step()  # a prefilled + 1 decode; its pages are now matchable
+        b = Request(prompt=list(pb), sampling=sp, rid=1)
+        eng.submit(b)
+        eng.step()  # b admitted: shares 2 full pages, forks the boundary
+        return eng, a, b
+
+    eng, a, b = engines()
+    slot_a = eng.active.index(a)
+    slot_b = eng.active.index(b)
+    assert b.prefix_matched == 20
+    t = eng.kv.table
+    assert list(t[slot_a, :2]) == list(t[slot_b, :2])  # aliased full pages
+    fork_page = int(t[slot_b, 2])
+    assert fork_page != int(t[slot_a, 2])
+    ctrl, ctrl_a, ctrl_b = engines()
+
+    # clobber the fork page across every layer's pools
+    eng.caches = jax.tree.map(
+        lambda x: (x.at[:, fork_page].set(jnp.ones_like(x[:, fork_page]))
+                   if x.ndim >= 2 and x.shape[1] == eng.kv.n_pages else x),
+        eng.caches)
+    eng.run()
+    ctrl.run()
+    assert a.tokens == ctrl_a.tokens  # sibling decode unchanged
+    assert b.tokens != ctrl_b.tokens  # the mutation was really read
+
+
+def test_prefix_offsets_keep_padding_writes_off_live_pages():
+    """Regression: with a prefix match, padded prefill rows sit at
+    positions offset+j which can run PAST max_len (the suffix buckets up
+    to a multiple of PREFILL_BUCKET).  Those rows must spill to the
+    trash page — clamped page-table indexing would alias them onto the
+    slot's LAST page and corrupt live KV rows (order-undefined duplicate
+    scatter), flipping the victim's decoded tokens."""
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    system = list(range(100, 120))  # 20 shared tokens
+    unique = list(range(10, 50))  # 40 more: plen 60, max_new 4 -> all 8 pages
+    sp = SamplingParams(max_new=4)
+
+    def gen(share):
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64,
+                          page_size=8, prefix_sharing=share)
+        a = Request(prompt=list(system) + [1, 2], sampling=sp, rid=0)
+        eng.submit(a)
+        eng.step()  # materialize the shared prefix pages
+        b = Request(prompt=system + unique, sampling=sp, rid=1)
+        eng.submit(b)
+        eng.run()
+        return b
+
+    b_shared = gen(True)
+    assert b_shared.prefix_matched == 20  # offsets active: padding rows
+    #                                       landed at positions 68..
+    b_plain = gen(False)
+    assert b_shared.tokens == b_plain.tokens
+
+
+def test_prefix_sharing_defers_same_tick_duplicates():
+    """Two identical prompts submitted together: the second must NOT read
+    pages whose prefill has not run; it admits one tick later and then
+    aliases the materialized pages."""
+    eng = _engine(_cfg(), max_batch=2)
+    a = Request(prompt=[5, 6, 7, 8, 9, 10, 11, 12, 13],
+                sampling=SamplingParams(max_new=4))
+    b = Request(prompt=[5, 6, 7, 8, 9, 10, 11, 12, 13, 14],
+                sampling=SamplingParams(max_new=4))
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()
+    assert a.state is RequestState.DECODING
+    assert b.state is RequestState.QUEUED  # deferred, not starved
+    eng.step()
+    assert b.state is RequestState.DECODING
+    assert b.prefix_matched > 0
+    eng.run()
+    assert len(a.tokens) == 4 and len(b.tokens) == 4
+    assert eng.kv.free_pages == eng.kv.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# preemption
+
+
+def test_page_pressure_preempts_lowest_priority_decoder():
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    # 4 usable pages x 8 tokens; each request needs 3 pages
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32, page_size=8,
+                      n_pages=5, prefix_sharing=False)
+    lo = Request(prompt=[1, 2, 3, 4, 5, 6],
+                 sampling=SamplingParams(max_new=18), rid=0, priority=0)
+    eng.submit(lo)
+    eng.step()
+    eng.step()
+    assert lo.state is RequestState.DECODING
+    hi = Request(prompt=[9, 8, 7, 6, 5, 4],
+                 sampling=SamplingParams(max_new=18), rid=1, priority=5)
+    eng.submit(hi)
+    eng.step()
+    # the high-priority request evicted lo: pages released, tokens kept
+    assert hi.state is RequestState.DECODING
+    assert lo.state is RequestState.QUEUED
+    kept_tokens = list(lo.tokens)
+    assert len(kept_tokens) >= 2
+    done = eng.run()  # lo resumes (re-prefills prompt+generated) and finishes
+    assert {r.rid for r in done} == {0, 1}
+    assert all(len(r.tokens) == 18 for r in done)
+    # resume continued FROM the kept tokens, it did not restart generation
+    assert lo.tokens[:len(kept_tokens)] == kept_tokens
+    assert eng.kv.free_pages == 4
+
+
+def test_equal_priority_never_preempts():
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32, page_size=8,
+                      n_pages=5, prefix_sharing=False)
+    a = Request(prompt=[1, 2, 3, 4], sampling=SamplingParams(max_new=8),
+                rid=0)
+    eng.submit(a)
+    eng.step()
+    b = Request(prompt=[5, 6, 7, 8], sampling=SamplingParams(max_new=8),
+                rid=1)
+    eng.submit(b)
+    eng.step()
+    assert a.state is RequestState.DECODING  # FIFO peer waits instead
+    done = eng.run()
+    assert {r.rid for r in done} == {0, 1}

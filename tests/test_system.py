@@ -13,7 +13,7 @@ from repro.configs.base import SHAPES
 from repro.launch.mesh import make_mesh_for
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving.engine import Request, ServeEngine
+from repro.serving.engine import Request, SamplingParams, ServeEngine
 from repro.train.checkpoint import (latest_step, restore_checkpoint,
                                     save_checkpoint)
 from repro.train.data import SyntheticLMData
@@ -104,7 +104,7 @@ def test_serving_engine_continuous_batching_consistency():
     def run(max_batch):
         eng = ServeEngine(md, cfg, params, max_batch=max_batch, max_len=64)
         for i, p in enumerate(prompts):
-            eng.submit(Request(prompt=list(p), max_new_tokens=6, rid=i))
+            eng.submit(Request(prompt=list(p), sampling=SamplingParams(max_new=6), rid=i))
         done = eng.run()
         return {r.rid: r.tokens for r in done}
 
@@ -120,7 +120,7 @@ def test_serving_engine_camformer_mode():
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64)
     for i in range(3):
-        eng.submit(Request(prompt=[3 + i, 5, 8], max_new_tokens=5, rid=i))
+        eng.submit(Request(prompt=[3 + i, 5, 8], sampling=SamplingParams(max_new=5), rid=i))
     done = eng.run()
     assert len(done) == 3
     assert all(len(r.tokens) == 5 for r in done)
