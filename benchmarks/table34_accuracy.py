@@ -100,11 +100,11 @@ def quality_ladder(csv_rows, steps=60):
 
     ladder = {
         "dense": cfg,
-        "binary (HAD, full softmax)": cfg.replace(attn_mode="binary"),
+        "binary (HAD, full softmax)": cfg.replace(attn_backend="binary"),
         "binary + single-stage top-32": cfg.replace(
-            attn_mode="camformer", stage1_k=16),  # stage1_k=group => exact
+            attn_backend="camformer", stage1_k=16),  # stage1_k=group => exact
         "binary + two-stage top-2/16 (paper)": cfg.replace(
-            attn_mode="camformer", stage1_k=2),
+            attn_backend="camformer", stage1_k=2),
     }
     results = {name: eval_ce(c) for name, c in ladder.items()}
     base = results["dense"]

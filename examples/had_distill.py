@@ -63,7 +63,7 @@ def main():
     params, _ = train(base, params, data, steps=80)
     ce_teacher = eval_ce(base, params, data)
 
-    bin_cfg = base.replace(attn_mode="binary")
+    bin_cfg = base.replace(attn_backend="binary")
     ce_binary_0 = eval_ce(bin_cfg, params, data)
 
     print("2) HAD fine-tune: binarized Q/K student w/ straight-through sign "
@@ -73,8 +73,8 @@ def main():
                        start_step=80)
     ce_binary_had = eval_ce(bin_cfg, student, data)
 
-    cam1 = bin_cfg.replace(attn_mode="camformer", stage1_k=8)  # single-stage
-    cam2 = bin_cfg.replace(attn_mode="camformer", stage1_k=2)  # paper
+    cam1 = bin_cfg.replace(attn_backend="camformer", stage1_k=8)  # single-stage
+    cam2 = bin_cfg.replace(attn_backend="camformer", stage1_k=2)  # paper
     ce_cam1 = eval_ce(cam1, student, data)
     ce_cam2 = eval_ce(cam2, student, data)
 

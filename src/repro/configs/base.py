@@ -8,7 +8,6 @@ with the exact published dimensions and register themselves.
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Optional, Tuple
 
 _REGISTRY: dict = {}
@@ -27,11 +26,11 @@ class ModelConfig:
     vocab: int
 
     # --- attention / CAMformer integration (first-class feature) ---
-    # attn_mode is the DEPRECATED seed-era spelling, kept as an alias:
-    # setting it alongside a DIFFERENT attn_backend is an error (silent
-    # precedence would make ablation replace(attn_mode=...) calls no-ops);
-    # use cfg.backend_for(layer) to resolve.
-    attn_mode: Optional[str] = None  # dense | binary | camformer (alias)
+    # attn_mode was the seed-era spelling; the alias was deprecated in
+    # PR 2-3 and is now REMOVED.  The field survives only so stale
+    # replace(attn_mode=...) call sites fail with a clear migration
+    # error instead of an opaque TypeError.
+    attn_mode: Optional[str] = None  # REMOVED — always None
     # Canonical backend selection (core/backend.py registry names).
     attn_backend: Optional[str] = None
     # Per-layer backend policy: layer i runs layer_backends[i % len] —
@@ -93,25 +92,18 @@ class ModelConfig:
         if self.layer_backends is not None and not self.layer_backends:
             raise ValueError("layer_backends must be a non-empty tuple or "
                              "None (= uniform attn_backend)")
-        if (self.attn_mode and self.attn_backend
-                and self.attn_mode != self.attn_backend):
-            raise ValueError(
-                f"conflicting attn_mode={self.attn_mode!r} (deprecated "
-                f"alias) and attn_backend={self.attn_backend!r}; set only "
-                "attn_backend")
         if self.attn_mode is not None:
-            warnings.warn(
-                f"attn_mode={self.attn_mode!r} is deprecated; use "
-                "attn_backend (core/backend.py registry name)",
-                DeprecationWarning, stacklevel=3)
+            raise ValueError(
+                f"attn_mode={self.attn_mode!r} was removed (deprecated in "
+                f"PR 2-3); set attn_backend={self.attn_mode!r} instead "
+                "(core/backend.py registry name), or layer_backends for a "
+                "per-layer policy")
 
-    # --- attention-backend resolution (the deprecation shim: every
-    # consumer goes through these accessors; nothing outside this file
-    # reads attn_mode) ---
+    # --- attention-backend resolution (every consumer goes through
+    # these accessors) ---
     @property
     def backend(self) -> str:
-        """Resolved default backend name (attn_backend, falling back to
-        the deprecated attn_mode alias).  A genuinely mixed layer policy
+        """Resolved default backend name.  A genuinely mixed layer policy
         has no single backend: consumers that cannot thread
         backend_for(layer) (encdec/rglru stacks, dry-run cells) must fail
         loudly rather than silently run every layer on the default."""
@@ -123,7 +115,7 @@ class ModelConfig:
                     f"{self.layer_backends}; use backend_for(layer) / "
                     "backend_names")
             return uniform
-        return self.attn_backend or self.attn_mode or "dense"
+        return self.attn_backend or "dense"
 
     def backend_for(self, layer: int) -> str:
         """Typed accessor: the backend name of one layer (per-layer

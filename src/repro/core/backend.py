@@ -28,7 +28,24 @@ Per-layer policy lives on ``ModelConfig`` (``attn_backend`` +
 models can run, e.g., sliding-window layers on ``dense`` and
 full-attention layers on ``camformer`` — the mixed-tile regime of
 X-Former-style accelerators.  New realizations are a ``register_backend``
-call, not another ``if cfg.attn_mode == ...`` site.
+call, not another ``if``-ladder site.
+
+Fused-step contract (the overlapped serving engine): ``paged_decode`` is
+dispatched once per engine tick for EVERY batch row inside one jit —
+decode rows, chunked-prefill rows, and inert rows alike — with sampling
+fused behind it, so the sampled token ids are the tick's only
+host<->device readback.  That imposes two row-level requirements on
+every backend:
+
+  * rows are independent: one row's inputs never change another row's
+    outputs or cache state (attention is per-row by construction; the
+    only known coupling is MoE capacity routing, which serving configs
+    must treat as approximate under overlap);
+  * ``kv_len == 0`` marks an INERT row: its page writes must resolve to
+    the trash page and its per-slot running statistics (camformer's
+    ``k_scale``) must be left untouched, so the engine can carry
+    preempted/finished/mid-prefill slots through a tick without
+    corrupting them.
 """
 
 from __future__ import annotations
@@ -189,6 +206,13 @@ class AttentionBackend:
         below it were prefilled by ANOTHER slot into shared pages, so
         per-slot running statistics (camformer's ``k_scale``) must count
         only positions >= base.  None means no sharing (all zeros).
+
+        Fused-step entry (module docstring): called for every batch row
+        of every tick inside one jit.  Rows with ``kv_len == 0`` are
+        INERT — implementations must route their writes to the trash
+        page (``_page_phys_rows`` does this when given kv_len) and leave
+        their per-slot statistics untouched; their attention output is
+        unspecified and never read.
         """
         raise NotImplementedError
 

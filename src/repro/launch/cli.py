@@ -2,14 +2,14 @@
 
 Backend selection is one flag set across serve/train/dryrun: ``--backend``
 (a core/backend.py registry name) plus ``--layer-backends`` for the
-per-layer policy; ``--attn-mode`` is kept as a deprecated alias that maps
-onto ``--backend`` with a note.
+per-layer policy.  ``--attn-mode`` (deprecated in PR 2-3) is REMOVED; the
+flag is still parsed (hidden) purely so stale scripts fail with a clear
+migration error instead of argparse's generic unrecognized-argument one.
 """
 
 from __future__ import annotations
 
 import argparse
-import warnings
 
 __all__ = ["add_backend_args", "apply_backend_args", "resolve_backend_arg"]
 
@@ -19,8 +19,7 @@ def add_backend_args(ap: argparse.ArgumentParser, *, choices=None,
     ap.add_argument("--backend", default=None, choices=choices,
                     help="attention backend (core/backend.py registry: "
                          "dense | binary | camformer)")
-    ap.add_argument("--attn-mode", default=None, choices=choices,
-                    help="DEPRECATED: old spelling of --backend")
+    ap.add_argument("--attn-mode", default=None, help=argparse.SUPPRESS)
     if layer_policy:
         ap.add_argument("--layer-backends", default=None,
                         help="comma-separated per-layer backend policy, "
@@ -28,20 +27,12 @@ def add_backend_args(ap: argparse.ArgumentParser, *, choices=None,
 
 
 def resolve_backend_arg(args) -> str | None:
-    """The requested backend name, honoring the deprecated alias."""
-    if args.attn_mode:
-        if args.backend and args.backend != args.attn_mode:
-            raise SystemExit(
-                f"conflicting --attn-mode {args.attn_mode} (deprecated "
-                f"alias) and --backend {args.backend}; pass only --backend")
-        warnings.warn(
-            f"--attn-mode is deprecated; use --backend {args.attn_mode}",
-            DeprecationWarning, stacklevel=2)
-        # DeprecationWarning is filtered outside __main__ by default;
-        # CLI users still need to see the note
-        print(f"note: --attn-mode is deprecated; use --backend "
-              f"{args.attn_mode}")
-        return args.attn_mode
+    """The requested backend name; stale --attn-mode usage is a clean
+    error pointing at the migration."""
+    if getattr(args, "attn_mode", None):
+        raise SystemExit(
+            f"--attn-mode was removed; use --backend {args.attn_mode} "
+            "(or --layer-backends for a per-layer policy)")
     return args.backend
 
 

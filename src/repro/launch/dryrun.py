@@ -156,7 +156,7 @@ def run_cell(arch: str, shape: str, *, multi_pod: bool, backend=None,
     rec = {
         "arch": arch, "shape": shape, "kind": SHAPES[shape]["kind"],
         "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
-        "backend": cfg.backend, "attn_mode": cfg.backend,  # legacy key
+        "backend": cfg.backend,
         "note": note, "tag": tag,
         "profile": __import__("repro.sharding.partitioning",
                               fromlist=["x"]).get_parallelism_profile(),

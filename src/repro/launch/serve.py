@@ -1,13 +1,21 @@
-"""Serving driver: continuous batching with streamed outputs.
+"""Serving driver: overlapped continuous batching with streamed outputs.
 
     PYTHONPATH=src python -m repro.launch.serve --arch camformer-bert --smoke \
         --requests 12 --max-new 24 [--backend camformer] \
-        [--layer-backends dense,camformer] [--temperature 0.8 --top-k 40 \
-        --top-p 0.95] [--shared-prefix 32] [--no-stream]
+        [--layer-backends dense,camformer] [--mode overlap|sync] \
+        [--prefill-slice 64] [--temperature 0.8 --top-k 40 --top-p 0.95] \
+        [--shared-prefix 32] [--no-stream]
 
-Tokens print as they are generated (``engine.stream()``); ``--shared-prefix N``
-prepends a common N-token system prompt to every request to exercise the
-copy-on-write prefix sharing (the page-pool report shows the aliasing).
+Tokens print as they are generated (``engine.stream()``).  ``--mode
+overlap`` (default) runs the dispatch-ahead loop — tick t+1 is enqueued
+before tick t's tokens are read, so host scheduling overlaps the device
+forward; ``--mode sync`` reads every tick (token-for-token identical).
+``--prefill-slice N`` prefills joining prompts in N-token chunks across
+ticks while resident slots keep decoding (continuous chunked-prefill
+batching).  ``--shared-prefix N`` prepends a common N-token system prompt
+to every request to exercise the copy-on-write prefix sharing (the
+page-pool report shows the aliasing; the prefix stays LRU-retained after
+the pool drains).
 """
 
 import argparse
@@ -42,6 +50,13 @@ def main():
                     help="page-pool size; default = full residency")
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="chunked-prefill chunk length (0 = whole prompt)")
+    ap.add_argument("--mode", default="overlap", choices=("overlap", "sync"),
+                    help="engine loop: dispatch-ahead overlap (default) or "
+                         "read-every-tick sync")
+    ap.add_argument("--prefill-slice", type=int, default=None,
+                    help="continuous batching: prefill joining prompts in "
+                         "chunks of this many tokens across ticks "
+                         "(default: whole prompt in the admission tick)")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress per-token output, print only summaries")
     args = ap.parse_args()
@@ -54,7 +69,8 @@ def main():
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, page_size=args.page_size,
-                      n_pages=args.n_pages)
+                      n_pages=args.n_pages, mode=args.mode,
+                      prefill_slice=args.prefill_slice)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
     print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
           f"{eng.kv.page_size} tokens "
@@ -70,12 +86,20 @@ def main():
         prompt = shared + list(
             map(int, jax.random.randint(sub, (plen,), 0, cfg.vocab)))
         eng.submit(Request(prompt=prompt, sampling=sampling, rid=i))
+    import time as _time
+    t0 = _time.perf_counter()
     for out in eng.stream():
         if not args.no_stream:
             tail = f"  [{out.finish_reason}]" if out.finished else ""
             print(f"  req {out.rid} #{out.index}: {out.token}{tail}")
+    wall = _time.perf_counter() - t0
+    print(f"[{args.mode}] {eng.ticks} decode ticks in {wall:.2f}s "
+          f"({eng.ticks / max(wall, 1e-9):.1f} ticks/s), "
+          f"{eng.readbacks} readbacks, host idle "
+          f"{eng.blocked_s / max(wall, 1e-9):.0%}")
     print(f"peak pool residency: {eng.peak_pages}/{eng.kv.n_pages - 1} pages"
-          f" ({eng.kv.shared_pages} still shared at drain)")
+          f" ({eng.kv.shared_pages} still shared, "
+          f"{eng.kv.retained_pages} prefix pages retained at drain)")
     for r in sorted(eng.done, key=lambda r: r.rid):
         print(f"req {r.rid}: prompt[{len(r.prompt)}] "
               f"prefix_hit={r.prefix_matched} -> {r.tokens}")

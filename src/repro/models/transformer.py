@@ -283,19 +283,28 @@ def lm_prefill_paged(params, batch, caches, page_table, cfg):
     valid lengths (lens == 0 marks an inactive slot whose page-table row
     must point at the trash page), and optional offsets (B,) — each
     slot's first computed position.  A nonzero offset means positions
-    [0, offset) live in already-prefilled pages (copy-on-write prefix
-    sharing): the slot's tokens are the suffix starting at ``offset``,
-    attending through the page table to the shared prefix rows.  With
-    cfg.prefill_chunk set and S a chunk multiple, the suffix batch is
-    processed in chunks that attend to the pages written so far (chunked
-    prefill, activation memory bounded by the chunk).  Returns (per-slot
-    last-prompt-token logits (B, V), pools).
+    [0, offset) live in already-written pages — a copy-on-write shared
+    prefix, or (continuous batching) this slot's OWN earlier prefill
+    chunks: the slot's tokens are the suffix starting at ``offset``,
+    attending through the page table to the earlier rows.  Optional
+    ``scale_base`` (B,) separates the per-slot running-statistics origin
+    from the chunk offset: positions >= scale_base were computed by THIS
+    slot (they count toward camformer's k_scale running mean across
+    chunks), positions below it live in another slot's shared pages.  It
+    defaults to ``offsets`` (single-dispatch prefill, where the two
+    coincide).  With cfg.prefill_chunk set and S a chunk multiple, the
+    suffix batch is processed in chunks that attend to the pages written
+    so far (chunked prefill, activation memory bounded by the chunk).
+    Returns (per-slot last-suffix-token logits (B, V), pools).
     """
     tokens, lens = batch["tokens"], batch["lens"].astype(jnp.int32)
     b, s = tokens.shape
     offsets = batch.get("offsets")
     offsets = (jnp.zeros((b,), jnp.int32) if offsets is None
                else offsets.astype(jnp.int32))
+    scale_base = batch.get("scale_base")
+    scale_base = (offsets if scale_base is None
+                  else scale_base.astype(jnp.int32))
     chunk = cfg.prefill_chunk
     if chunk and s > chunk and s % chunk == 0:
         n = s // chunk
@@ -307,7 +316,7 @@ def lm_prefill_paged(params, batch, caches, page_table, cfg):
                    + jnp.arange(chunk, dtype=jnp.int32)[None])
             x, cs, _ = lm_hidden(
                 params, tk, cfg, positions=pos, caches=cs, kv_len=lens,
-                page_table=page_table, scale_base=offsets, causal=True)
+                page_table=page_table, scale_base=scale_base, causal=True)
             return cs, x
 
         caches, xs = jax.lax.scan(
@@ -317,10 +326,10 @@ def lm_prefill_paged(params, batch, caches, page_table, cfg):
         pos = offsets[:, None] + jnp.arange(s, dtype=jnp.int32)[None]
         x, caches, _ = lm_hidden(
             params, tokens, cfg, positions=pos, caches=caches, kv_len=lens,
-            page_table=page_table, scale_base=offsets, causal=True)
-    # the final prompt token sits at suffix row (lens - offsets - 1)
+            page_table=page_table, scale_base=scale_base, causal=True)
+    # the final valid token sits at suffix row (lens - offsets - 1)
     last = jnp.take_along_axis(
-        x, jnp.maximum(lens - offsets - 1, 0)[:, None, None].astype(
+        x, jnp.clip(lens - offsets - 1, 0, s - 1)[:, None, None].astype(
             jnp.int32),
         axis=1)[:, 0]
     return _head_logits(params, last, cfg), caches

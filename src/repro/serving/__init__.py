@@ -16,8 +16,10 @@ from repro.serving.kv_cache import (PagedKVCache, PrefixMatch, TRASH_PAGE,
                                     pages_for)
 from repro.serving.request import (Request, RequestOutput, RequestState,
                                    SamplingParams)
+from repro.serving.scheduler import Scheduler, TickPlan
 
 __all__ = [
-    "Admission", "ServeEngine", "PagedKVCache", "PrefixMatch", "TRASH_PAGE",
-    "pages_for", "Request", "RequestOutput", "RequestState", "SamplingParams",
+    "Admission", "ServeEngine", "Scheduler", "TickPlan", "PagedKVCache",
+    "PrefixMatch", "TRASH_PAGE", "pages_for", "Request", "RequestOutput",
+    "RequestState", "SamplingParams",
 ]

@@ -1,43 +1,50 @@
-"""Production serving engine: continuous batching with an explicit
-request lifecycle, streamed outputs, per-request sampling, priority
-preemption, and copy-on-write prefix sharing.
+"""Overlapped serving engine: host-plan / device-step split with
+dispatch-ahead decode and continuous chunked-prefill batching.
 
-Architecture (one engine tick = ``step()``):
+Three-part architecture (see also serving/scheduler.py):
 
-  1. ``schedule()`` — ADMISSION POLICY, host-only.  Picks queued requests
-     (highest priority first, FIFO within a class), hash-matches their
-     prompts against the paged cache's prefix registry (shared system
-     prompts attach already-prefilled pages read-only; a mid-page match
-     forks its boundary page copy-on-write), reserves pages for
-     ``prompt + max_new`` up front, and — under page pressure — preempts
-     the lowest-priority decoding slot back to the queue (pages released,
-     generated tokens kept; resume re-prefills prompt+generated).
-  2. ``prefill(admissions)`` — one batched (and, with
-     ``cfg.prefill_chunk``, chunked) forward over every admitted suffix.
-     Requests with a matched prefix prefill ONLY the unmatched tokens at
-     their true positions (``offsets``); the first generated token is
-     sampled per-request (temperature / top-k / top-p).
-  3. decode tick — every active slot advances one token through its
-     layer's ``backend.paged_decode``, sampled with its own
-     ``SamplingParams``; finished/stopped requests retire and free pages.
+  1. ``Scheduler`` — host-pure admission, preemption, finish detection,
+     and page planning.  ``plan_tick()`` emits a ``TickPlan`` computed
+     entirely from host state: which requests admit (and which COW pages
+     fork), one prompt chunk per PREFILLING slot, one decode row per
+     DECODING slot, plus the per-slot sampling-parameter / rng-key
+     arrays.
 
-Streaming: every generated token is surfaced as a ``RequestOutput`` from
-``step()`` / the ``engine.stream()`` iterator, and through each request's
-``on_token`` callback.  ``cancel(rid)`` removes a queued or running
-request immediately and frees its pages.
+  2. the fused device step — per-layer ``backend.paged_decode`` dispatch
+     + paged cache write + vectorized keyed sampling run inside ONE jit
+     per tick, so the sampled token ids (one ``(B,)`` int32 array) are
+     the only host<->device readback of a decode tick.  The step's input
+     tokens come from the ON-DEVICE token buffer of the previous tick
+     (double-buffered), merged with this tick's prefill first-token
+     samples — never from a host round-trip.
+
+  3. the loop — ``mode="sync"`` reads each tick's tokens immediately
+     (plan -> dispatch -> read); ``mode="overlap"`` dispatches tick
+     ``t+1`` from the not-yet-read token buffer of tick ``t``, then
+     reads tick ``t`` while ``t+1`` executes, overlapping host
+     scheduling/bookkeeping with the device forward.  Host visibility of
+     token VALUES is deferred one tick; everything value-independent
+     (positions, page budgets, max_new finishes) is planned exactly as
+     in sync mode, so the two modes are token-for-token identical (same
+     per-request rng: sampling is keyed by ``(seed, rid, index)``).
+     A stop-token finish is value-dependent, so the overlapped loop runs
+     at most one extra "zombie" tick for that slot — its writes land in
+     pages the slot still owns and its sampled token is discarded at
+     ingest, never surfaced.
+
+Continuous batching: with ``prefill_slice=N`` a joining request prefills
+in N-token (page-sized) chunks across ticks while existing slots keep
+decoding, instead of a stop-the-world whole-prompt prefill
+(``prefill_slice=None``, the default, preserves the classic regime).
 
 ONE cache regime: every config serves from the paged KV cache
-(serving/kv_cache.py).  The page *layout* is backend-polymorphic — each
-layer's ``AttentionBackend`` (core/backend.py, resolved per layer via
-``cfg.backend_for``) declares its pool leaves through the model's
-``page_specs``: dense/binary layers use bf16 ``k_pages``/``v_pages``,
-camformer layers bit-packed uint32 ``kp_pages`` + ``v_pages`` +
-``k_scale``, all indirected by one shared page table.  COW forks copy a
-physical page across every layer's pools in one jitted device op.
+(serving/kv_cache.py) with backend-polymorphic page layouts, COW prefix
+sharing, and LRU prefix retention; see that module.
 """
 
 from __future__ import annotations
 
+import time
 from typing import Iterator, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -47,26 +54,16 @@ import numpy as np
 from repro.launch.steps import cast_params
 from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
-from repro.serving.kv_cache import (NO_MATCH, TRASH_PAGE, PagedKVCache,
-                                    pages_for)
+from repro.serving.kv_cache import PagedKVCache, pages_for
 from repro.serving.request import (Request, RequestOutput, RequestState,
                                    SamplingParams)
+from repro.serving.scheduler import Admission, Emit, Scheduler, TickPlan
 
 __all__ = ["Request", "SamplingParams", "RequestState", "RequestOutput",
-           "Admission", "ServeEngine"]
+           "Admission", "Scheduler", "ServeEngine"]
 
 # Right-pad prompt batches to a multiple of this (bounds jit retraces).
 PREFILL_BUCKET = 16
-
-
-class Admission(NamedTuple):
-    """One scheduling decision: where a request lands and what it shares."""
-
-    slot: int
-    req: Request
-    resume_from: int  # generated tokens carried across a preemption
-    matched: int  # prefix tokens served from shared pages (0 = none)
-    forks: Tuple[Tuple[int, int], ...]  # (src, dst) COW page copies
 
 
 def _copy_pool_page(caches, src, dst):
@@ -90,21 +87,37 @@ def _copy_pool_page(caches, src, dst):
     return one(caches, 1)  # uniform: leading `layers` axis
 
 
+class _InFlight(NamedTuple):
+    """Device handles of one dispatched tick, read back one tick later
+    (overlap) or immediately (sync)."""
+
+    prefill_tok: Optional[jax.Array]  # (B,) sampled first tokens
+    prefill_emit: Tuple[Emit, ...]
+    decode_tok: Optional[jax.Array]  # (B,) sampled decode tokens
+    decode_emit: Tuple[Emit, ...]
+
+    @property
+    def empty(self) -> bool:
+        return not (self.prefill_emit or self.decode_emit)
+
+
 class ServeEngine:
     def __init__(self, md, cfg, params, *, max_batch: int = 8,
                  max_len: int = 512, seed: int = 0,
                  page_size: int = 64, n_pages: Optional[int] = None,
-                 prefix_sharing: bool = True):
+                 prefix_sharing: bool = True, mode: str = "overlap",
+                 prefill_slice: Optional[int] = None):
         if md.page_specs is None:
             raise ValueError(
                 f"{cfg.name!r} (family {cfg.family!r}) does not expose the "
                 "paged serving interface (page_specs / prefill_paged / "
                 "decode_paged) required by ServeEngine")
+        if mode not in ("sync", "overlap"):
+            raise ValueError(f"mode must be 'sync' or 'overlap', got {mode!r}")
         self.md, self.cfg = md, cfg
         self.params = cast_params(params, dtype_of(cfg))
         self.max_batch, self.max_len = max_batch, max_len
-        self.rng = jax.random.PRNGKey(seed)
-        self.prefix_sharing = prefix_sharing
+        self.mode = mode
 
         # prefill pads prompt batches to prefill_chunk multiples capped
         # at max_len; an indivisible max_len would silently skip the
@@ -120,294 +133,227 @@ class ServeEngine:
             # Smaller pools trade capacity for admission backpressure.
             n_pages = 1 + max_batch * per_seq  # +1: trash page
         self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
+        self.sched = Scheduler(
+            self.kv, max_batch=max_batch, max_len=max_len, seed=seed,
+            prefix_sharing=prefix_sharing, prefill_slice=prefill_slice,
+            prefill_bucket=chunk or PREFILL_BUCKET)
         specs = md.page_specs(cfg, n_pages, page_size, max_batch)
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
         self.caches = jax.tree.map(
             lambda t: jnp.zeros(t[0].shape, t[0].dtype), specs,
             is_leaf=is_leaf)
-        self._decode = jax.jit(
-            lambda p, t, pos, kvl, c, pt, base: md.decode_paged(
-                p, t, pos, kvl, c, pt, cfg, base=base))
-        self._prefill = jax.jit(
-            lambda p, b, c, pt: md.prefill_paged(p, b, c, pt, cfg))
+        self._prefill_jits = {}  # hot -> jitted fused prefill-chunk step
+        self._decode_jits = {}  # hot -> jitted fused decode step
         self._fork = jax.jit(_copy_pool_page)
+        # double-buffered on-device token state: the decode step's input
+        # tokens are the previous step's output, never a host round-trip
+        self._tok_buf = jnp.zeros((max_batch,), jnp.int32)
+        self._zero_tok = jnp.zeros((max_batch,), jnp.int32)
 
-        self.pos = np.zeros(max_batch, np.int32)  # next position per slot
-        self.base = np.zeros(max_batch, np.int32)  # prefix offset per slot
-        self.active: List[Optional[Request]] = [None] * max_batch
-        self.queue: List[Request] = []
-        self.done: List[Request] = []
-        self.peak_pages = 0  # high-water mark of unique resident pages
-        self._next_rid = 0
-        self._arrival = 0  # FIFO tiebreak within a priority class
-        self._admissions = 0  # preemption tiebreak (evict newest first)
+        # instrumentation (benchmarks / the single-readback invariant)
+        self.readbacks = 0  # device->host transfers (token id arrays)
+        self.blocked_s = 0.0  # host time spent blocked on readbacks
+        self.ticks = 0  # decode steps dispatched
 
     # ------------------------------------------------------------------
-    # submission / cancellation
+    # scheduler delegation (host state lives on self.sched)
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> int:
-        """Queue a request; returns its rid (auto-assigned when None)."""
-        if req.rid is None:
-            req.rid = self._next_rid
-        self._next_rid = max(self._next_rid, req.rid + 1)
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        need = len(req.prompt) + req.sampling.max_new
-        if need > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new {need} > max_len "
-                f"{self.max_len}")
-        req.state = RequestState.QUEUED
-        req.tokens = []
-        req.finish_reason = None
-        req._seq = self._arrival  # FIFO order, kept across preemption
-        self._arrival += 1
-        self.queue.append(req)
-        return req.rid
+        return self.sched.submit(req)
 
     def cancel(self, rid: int) -> Optional[RequestOutput]:
-        """Terminate a queued or running request NOW; running requests
-        free their pages immediately.  Returns the final output record,
-        or None if rid is not live."""
-        for qi, r in enumerate(self.queue):
-            if r.rid == rid:
-                self.queue.pop(qi)
-                return self._finish(r, "cancelled")
-        for slot, r in enumerate(self.active):
-            if r is not None and r.rid == rid:
-                self.kv.release(slot)
-                self.active[slot] = None
-                return self._finish(r, "cancelled")
-        return None
-
-    def _finish(self, req: Request, reason: str) -> RequestOutput:
-        req.state = (RequestState.CANCELLED if reason == "cancelled"
-                     else RequestState.FINISHED)
-        req.finish_reason = reason
-        self.done.append(req)
-        out = RequestOutput(
-            rid=req.rid, token=None, index=len(req.tokens), state=req.state,
-            finished=True, finish_reason=reason, tokens=tuple(req.tokens))
-        if req.on_token:
-            req.on_token(out)
-        return out
-
-    # ------------------------------------------------------------------
-    # scheduling (admission policy — no model computation)
-    # ------------------------------------------------------------------
-    def _next_queued_index(self) -> int:
-        return min(range(len(self.queue)),
-                   key=lambda i: (-self.queue[i].priority,
-                                  self.queue[i]._seq))
-
-    def _pick_victim(self, priority: int) -> Optional[int]:
-        """Lowest-priority active slot strictly below `priority`; among
-        equals, the most recently admitted (least prefill to redo... the
-        newest has generated the least)."""
-        best = None
-        for slot, r in enumerate(self.active):
-            # only DECODING slots are evictable: a PREFILLING slot was
-            # admitted this very tick and its forward has not run yet
-            if (r is None or r.state is not RequestState.DECODING
-                    or r.priority >= priority):
-                continue
-            key = (r.priority, -r._admit_seq)
-            if best is None or key < best[0]:
-                best = (key, slot)
-        return None if best is None else best[1]
-
-    def _preempt(self, slot: int) -> None:
-        req = self.active[slot]
-        self.kv.release(slot)  # sharers keep refcounted pages alive
-        self.active[slot] = None
-        req.state = RequestState.QUEUED  # tokens kept: resume re-prefills
-        self.queue.append(req)  # _seq unchanged: keeps its FIFO standing
+        return self.sched.cancel(rid)
 
     def schedule(self) -> List[Admission]:
-        """Admission policy: fill free slots from the queue, matching
-        shared prefixes and preempting lower-priority decoders under page
-        pressure.  Mutates allocator state (reservations, refcounts, fork
-        page ids) but runs NO model computation — ``prefill`` consumes
-        the returned admissions."""
-        admitted: List[Admission] = []
-        while self.queue:
-            qi = self._next_queued_index()
-            req = self.queue[qi]
-            effective = req.prompt + req.tokens  # resume covers generated
-            need = len(req.prompt) + req.sampling.max_new
-            match = (self.kv.match_prefix(effective)
-                     if self.prefix_sharing else NO_MATCH)
-            if match.defer:
-                break  # prefix pages materialize this tick; retry next
-            slot = next(
-                (i for i, r in enumerate(self.active) if r is None), None)
-            if slot is None or not self.kv.can_reserve(
-                    need, slot, n_shared=len(match.shared)):
-                victim = self._pick_victim(req.priority)
-                if victim is None:
-                    break  # page pressure: wait for retirements
-                self._preempt(victim)
-                continue  # re-match: the release may have dropped pages
-            self.queue.pop(qi)
-            forks = self.kv.reserve_shared(slot, match, need)
-            if self.prefix_sharing:
-                self.kv.register_prefix(slot, effective)
-            req.state = RequestState.PREFILLING
-            req.prefix_matched = match.matched
-            req._admit_seq = self._admissions
-            self._admissions += 1
-            self.active[slot] = req  # slot is taken from this point on
-            admitted.append(Admission(
-                slot, req, len(req.tokens), match.matched, tuple(forks)))
-        if not admitted and self.queue and all(
-                r is None for r in self.active):
-            req = self.queue[self._next_queued_index()]
-            raise MemoryError(
-                f"request {req.rid} needs "
-                f"{pages_for(len(req.prompt) + req.sampling.max_new, self.kv.page_size)}"
-                f" pages; pool has {self.kv.n_pages - 1}")
-        self.peak_pages = max(self.peak_pages, self.kv.used_pages)
-        return admitted
+        """Admission policy alone (no model computation) — see
+        ``Scheduler.admit``."""
+        return self.sched.admit()
 
-    # ------------------------------------------------------------------
-    # prefill (batched, chunked, prefix-skipping)
-    # ------------------------------------------------------------------
-    def _next_rng(self):
-        self.rng, sub = jax.random.split(self.rng)
-        return sub
+    @property
+    def queue(self) -> List[Request]:
+        return self.sched.queue
 
-    def _sample(self, logits, per_slot):
-        """Per-request sampling for one tick.  The all-greedy case (the
-        default policy) short-circuits to a single argmax — no sorts, no
-        categorical, no rng split on the decode hot path."""
-        if all(sp.temperature <= 0.0 for _, sp in per_slot):
-            return np.asarray(S.greedy(logits))
-        temps = np.zeros(self.max_batch, np.float32)
-        top_ks = np.zeros(self.max_batch, np.int32)
-        top_ps = np.ones(self.max_batch, np.float32)
-        for slot, sp in per_slot:
-            temps[slot] = sp.temperature
-            top_ks[slot] = sp.top_k
-            top_ps[slot] = sp.top_p
-        return np.asarray(S.sample_step(
-            logits, self._next_rng(), jnp.asarray(temps),
-            jnp.asarray(top_ks), jnp.asarray(top_ps)))
+    @property
+    def active(self) -> List[Optional[Request]]:
+        return self.sched.active
 
-    def prefill(self, admitted: List[Admission]) -> List[RequestOutput]:
-        """Run the batched (chunked) prefill for this tick's admissions:
-        COW fork copies first, then one forward over every admitted
-        suffix at its true positions, then per-request first-token
-        sampling."""
-        events: List[RequestOutput] = []
-        if not admitted:
-            return events
-        for adm in admitted:  # copy shared boundary pages BEFORE writes
-            for src, dst in adm.forks:
-                self.caches = self._fork(
-                    self.caches, jnp.int32(src), jnp.int32(dst))
-        bucket = self.cfg.prefill_chunk or PREFILL_BUCKET
-        suffixes = {adm.slot: (adm.req.prompt + adm.req.tokens)[adm.matched:]
-                    for adm in admitted}
-        maxs = max(len(s) for s in suffixes.values())
-        s = min(-(-maxs // bucket) * bucket, self.max_len)
-        tokens = np.zeros((self.max_batch, s), np.int32)
-        lens = np.zeros(self.max_batch, np.int32)
-        offsets = np.zeros(self.max_batch, np.int32)
-        for adm in admitted:
-            suf = suffixes[adm.slot]
-            tokens[adm.slot, :len(suf)] = suf
-            lens[adm.slot] = adm.matched + len(suf)  # TOTAL valid length
-            offsets[adm.slot] = adm.matched
-        # Non-admitted rows (inactive or mid-generation) are dummies: route
-        # their padded-prompt writes to the trash page, NOT their own pages.
-        pt = np.where(lens[:, None] > 0, self.kv.table, TRASH_PAGE)
-        batch = {"tokens": jnp.asarray(tokens), "lens": jnp.asarray(lens),
-                 "offsets": jnp.asarray(offsets)}
-        logits, self.caches = self._prefill(
-            self.params, batch, self.caches, jnp.asarray(pt))
-        self.kv.commit_prefixes()  # registered prefixes now materialized
-        first = self._sample(
-            logits, [(adm.slot, adm.req.sampling) for adm in admitted])
-        for adm in admitted:
-            req = adm.req
-            self.active[adm.slot] = req
-            self.pos[adm.slot] = lens[adm.slot]
-            self.base[adm.slot] = adm.matched
-            req.state = RequestState.DECODING
-            events.append(self._append(adm.slot, req, int(first[adm.slot])))
-        return events
+    @property
+    def done(self) -> List[Request]:
+        return self.sched.done
 
-    def _append(self, slot: int, req: Request, token: int) -> RequestOutput:
-        """Record one generated token, detect finish, emit the output."""
-        req.tokens.append(token)
-        reason = None
-        if token in req.sampling.stop:
-            reason = "stop"
-        elif (len(req.tokens) >= req.sampling.max_new
-              or self.pos[slot] >= self.max_len - 1):
-            reason = "length"
-        if reason is not None:
-            req.state = RequestState.FINISHED
-            req.finish_reason = reason
-        out = RequestOutput(
-            rid=req.rid, token=token, index=len(req.tokens),
-            state=req.state, finished=reason is not None,
-            finish_reason=reason, tokens=tuple(req.tokens))
-        if req.on_token:
-            req.on_token(out)
-        return out
-
-    def _retire(self) -> None:
-        """Free the slots of requests that finished this tick."""
-        for slot, r in enumerate(self.active):
-            if r is not None and r.state.is_terminal:
-                self.done.append(r)
-                self.active[slot] = None
-                self.kv.release(slot)
-
-    # ------------------------------------------------------------------
-    # the engine tick
-    # ------------------------------------------------------------------
-    def step(self) -> List[RequestOutput]:
-        """One engine tick: schedule + prefill admissions, then decode
-        every active slot one token.  Returns this tick's streamed
-        outputs (empty when the engine is idle)."""
-        events = self.prefill(self.schedule())
-        self._retire()  # e.g. max_new == 1: finished at prefill
-        live = [(i, r) for i, r in enumerate(self.active) if r is not None]
-        if not live:
-            return events
-        tokens = np.zeros(self.max_batch, np.int32)
-        for i, r in live:
-            tokens[i] = r.tokens[-1]
-        pos = jnp.asarray(self.pos)
-        kv_len = jnp.asarray(self.pos + 1)
-        logits, self.caches = self._decode(
-            self.params, jnp.asarray(tokens), pos, kv_len, self.caches,
-            jnp.asarray(self.kv.table), jnp.asarray(self.base))
-        nxt = self._sample(logits, [(i, r.sampling) for i, r in live])
-        for i, r in live:
-            self.pos[i] += 1
-            events.append(self._append(i, r, int(nxt[i])))
-        self._retire()
-        return events
+    @property
+    def peak_pages(self) -> int:
+        return self.sched.peak_pages
 
     @property
     def has_work(self) -> bool:
-        return bool(self.queue) or any(r is not None for r in self.active)
+        return self.sched.has_work
+
+    # ------------------------------------------------------------------
+    # the fused device step (everything per tick inside one jit)
+    # ------------------------------------------------------------------
+    def _prefill_jit(self, hot: bool):
+        if hot not in self._prefill_jits:
+            md, cfg = self.md, self.cfg
+
+            def fn(params, tokens, lens, offsets, scale_base, caches, pt,
+                   keys, index, temps, top_ks, top_ps):
+                batch = {"tokens": tokens, "lens": lens, "offsets": offsets,
+                         "scale_base": scale_base}
+                logits, caches = md.prefill_paged(params, batch, caches, pt,
+                                                  cfg)
+                if hot:
+                    first = S.sample_step_keyed(logits, keys, index, temps,
+                                                top_ks, top_ps)
+                else:
+                    first = S.greedy(logits)
+                return first, caches
+
+            self._prefill_jits[hot] = jax.jit(fn)
+        return self._prefill_jits[hot]
+
+    def _decode_jit(self, hot: bool):
+        if hot not in self._decode_jits:
+            md, cfg = self.md, self.cfg
+
+            def fn(params, tok_prev, fresh, fresh_mask, live_mask, pos,
+                   kv_len, caches, pt, base, keys, index, temps, top_ks,
+                   top_ps):
+                # merge the double-buffered token state on-device: rows
+                # that finished prefill THIS tick take their freshly
+                # sampled first token, continuing rows take the previous
+                # step's output, inert rows are pinned to 0 (keeps the
+                # batch contents identical to the sync loop's)
+                tokens = jnp.where(live_mask,
+                                   jnp.where(fresh_mask, fresh, tok_prev), 0)
+                logits, caches = md.decode_paged(
+                    params, tokens, pos, kv_len, caches, pt, cfg, base=base)
+                if hot:
+                    nxt = S.sample_step_keyed(logits, keys, index, temps,
+                                              top_ks, top_ps)
+                else:
+                    nxt = S.greedy(logits)
+                return nxt, caches
+
+            self._decode_jits[hot] = jax.jit(fn)
+        return self._decode_jits[hot]
+
+    def _dispatch(self, plan: TickPlan) -> _InFlight:
+        """Enqueue one tick's device work; returns unread token handles."""
+        for src, dst in plan.forks:  # COW copies BEFORE any write
+            self.caches = self._fork(
+                self.caches, jnp.int32(src), jnp.int32(dst))
+        keys = jnp.asarray(plan.keys)
+        temps = jnp.asarray(plan.temps)
+        top_ks = jnp.asarray(plan.top_ks)
+        top_ps = jnp.asarray(plan.top_ps)
+        prefill_tok = None
+        fresh, fresh_mask = self._zero_tok, None
+        pf = plan.prefill
+        if pf is not None:
+            first, self.caches = self._prefill_jit(pf.hot)(
+                self.params, jnp.asarray(pf.tokens), jnp.asarray(pf.lens),
+                jnp.asarray(pf.offsets), jnp.asarray(pf.scale_base),
+                self.caches, jnp.asarray(pf.table), keys,
+                jnp.asarray(pf.sample_index), temps, top_ks, top_ps)
+            if pf.emit:
+                prefill_tok = fresh = first
+        dc = plan.decode
+        decode_tok = None
+        if dc is not None:
+            fresh_mask = jnp.asarray(dc.fresh)
+            decode_tok, self.caches = self._decode_jit(dc.hot)(
+                self.params, self._tok_buf, fresh, fresh_mask,
+                jnp.asarray(dc.live), jnp.asarray(dc.pos),
+                jnp.asarray(dc.kv_len), self.caches, jnp.asarray(dc.table),
+                jnp.asarray(dc.base), keys, jnp.asarray(dc.sample_index),
+                temps, top_ks, top_ps)
+            self._tok_buf = decode_tok
+            self.ticks += 1
+        elif pf is not None and pf.emit:
+            # prefill completed with no decode tick in the same plan (the
+            # prefill()-only driver, or all completions at max_new == 1):
+            # fold the first-token samples into the on-device buffer so
+            # the NEXT tick's decode still never needs a host round-trip
+            mask = np.zeros(self.max_batch, bool)
+            mask[[e.slot for e in pf.emit]] = True
+            self._tok_buf = jnp.where(jnp.asarray(mask), fresh,
+                                      self._tok_buf)
+        return _InFlight(prefill_tok, pf.emit if pf else (),
+                         decode_tok, dc.emit if dc else ())
+
+    def _read(self, arr: jax.Array) -> np.ndarray:
+        """THE host<->device readback (token ids only); instrumented so
+        benchmarks report the host-idle fraction and tests can assert the
+        one-readback-per-tick invariant."""
+        t0 = time.perf_counter()
+        out = np.asarray(arr)
+        self.blocked_s += time.perf_counter() - t0
+        self.readbacks += 1
+        return out
+
+    def _collect(self, inflight: _InFlight) -> List[RequestOutput]:
+        """Read a dispatched tick's sampled ids and surface them (first
+        prefill samples, then decode samples — the sync event order)."""
+        events: List[RequestOutput] = []
+        for arr, emits in ((inflight.prefill_tok, inflight.prefill_emit),
+                           (inflight.decode_tok, inflight.decode_emit)):
+            if not emits:
+                continue
+            vals = self._read(arr)
+            for e in emits:
+                out = self.sched.ingest(e, int(vals[e.slot]))
+                if out is not None:
+                    events.append(out)
+        return events
+
+    # ------------------------------------------------------------------
+    # the engine loops
+    # ------------------------------------------------------------------
+    def step(self) -> List[RequestOutput]:
+        """One SYNCHRONOUS engine tick: plan, dispatch, read.  Returns
+        this tick's streamed outputs (empty when the engine is idle)."""
+        return self._collect(self._dispatch(self.sched.plan_tick()))
+
+    def prefill(self, admitted: Optional[List[Admission]] = None
+                ) -> List[RequestOutput]:
+        """Drive the PREFILLING slots to completion (no admissions, no
+        decode ticks) and return their first-token outputs.  ``admitted``
+        is accepted for API compatibility with ``prefill(schedule())``;
+        the scheduler already tracks the slots."""
+        del admitted
+        events: List[RequestOutput] = []
+        while self.sched.has_prefilling:
+            plan = self.sched.plan_tick(admit=False, decode=False)
+            events.extend(self._collect(self._dispatch(plan)))
+        return events
 
     def stream(self, *requests: Request) -> Iterator[RequestOutput]:
         """Submit `requests` (if given) and drive the engine, yielding
         each generated token as a RequestOutput until the pool drains.
-        Token-for-token identical to ``run()`` — same ticks, same rng."""
+        Token-for-token identical between ``mode="sync"`` and
+        ``mode="overlap"`` (and to ``run()``): same per-request rng, same
+        per-request tick schedule."""
         for r in requests:
             self.submit(r)
-        while self.has_work:
-            yield from self.step()
+        if self.mode == "sync":
+            while self.has_work:
+                yield from self.step()
+            return
+        pending: Optional[_InFlight] = None
+        while self.has_work or pending is not None:
+            # dispatch tick t+1 BEFORE reading tick t: the device starts
+            # on the next forward while the host ingests tokens, detects
+            # finishes, and plans — the overlap the paper's pipelined
+            # search/contextualization story calls for.
+            inflight = self._dispatch(self.sched.plan_tick())
+            if pending is not None:
+                yield from self._collect(pending)
+            pending = None if inflight.empty else inflight
 
     def run(self) -> List[Request]:
         """Drain the engine; returns completed requests in finish order."""
         for _ in self.stream():
             pass
-        return self.done
+        return self.sched.done

@@ -48,17 +48,35 @@ capped at ``len(prompt) - 1`` so at least one prompt token is computed
 (prefill needs a final hidden state to sample from).
 
 Pages registered in the CURRENT admission round are "pending" — their
-contents materialize only when the batched prefill runs — so a prompt
+contents materialize only when their prefill chunks run — so a prompt
 matching a pending page reports ``defer=True`` and the engine retries
-next tick (one tick of latency buys chunked-prefill-safe sharing).
-There is no retention: a prefix is shareable only while some live slot
-still holds its pages.
+next tick (with multi-tick chunked prefill a slot's pages stay pending
+until its LAST chunk is dispatched; ``commit_pages`` marks them
+materialized per slot).
+
+Prefix retention (LRU)
+----------------------
+
+A registered page whose refcount drops to zero is not freed: it moves to
+a RETAINED pool (its registry entries stay live), so a drained engine
+still hash-matches a resubmitted system prompt and reuses the pages
+without re-prefilling.  Retained pages are reclaimable: every allocation
+draws from the free list first and then evicts the least-recently-
+released retained page (dropping its registry keys).  ``free_pages``
+therefore counts free + retained — both are available capacity — while
+``retained_pages`` exposes the cache depth.  Plan/commit split: all of
+this is host-pure bookkeeping; the engine snapshots the page table at
+dispatch time, so host-side reservations and evictions never perturb
+ticks already in flight (device content of a retained page stays valid
+until a later prefill/fork overwrites it, which the dispatch order
+guarantees happens only after any copy that still reads it).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, NamedTuple, Optional, Set, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
 
@@ -99,12 +117,15 @@ class PagedKVCache:
     page_size: int
     max_batch: int
     max_pages_per_seq: int
+    retain_prefixes: bool = True  # LRU-cache refcount-0 registered pages
 
     def __post_init__(self):
         if self.n_pages < 2:
             raise ValueError("need at least 2 pages (page 0 is reserved)")
         # LIFO free list; page 0 reserved as the trash page.
         self._free: List[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
+        # refcount-0 pages kept for prefix reuse, LRU order (oldest first).
+        self._retained: "OrderedDict[int, None]" = OrderedDict()
         self._owned: List[List[int]] = [[] for _ in range(self.max_batch)]
         self.table = np.full((self.max_batch, self.max_pages_per_seq),
                              TRASH_PAGE, np.int32)
@@ -121,29 +142,64 @@ class PagedKVCache:
     # -- capacity ------------------------------------------------------
     @property
     def free_pages(self) -> int:
-        return len(self._free)
+        """Reclaimable pages: truly free + retained (evictable) prefixes."""
+        return len(self._free) + len(self._retained)
+
+    @property
+    def retained_pages(self) -> int:
+        """Refcount-0 pages kept alive for prefix reuse (LRU-evictable)."""
+        return len(self._retained)
 
     @property
     def used_pages(self) -> int:
-        """UNIQUE physical pages in use (shared pages count once)."""
-        return (self.n_pages - 1) - len(self._free)
+        """UNIQUE physical pages actively owned (shared pages count once;
+        retained prefix pages do not count — they are reclaimable)."""
+        return (self.n_pages - 1) - self.free_pages
 
     @property
     def shared_pages(self) -> int:
         """Physical pages currently referenced by more than one slot."""
         return int(np.sum(self.page_refs > 1))
 
+    def _avail_for(self, match: "PrefixMatch" = NO_MATCH) -> int:
+        """Pages allocatable while attaching `match`: attached shared
+        pages leave the retained pool without consuming an allocation,
+        and the fork source is pinned against eviction for the fork
+        copy."""
+        avail = self.free_pages
+        avail -= sum(1 for p in match.shared if p in self._retained)
+        if match.fork_src is not None and match.fork_src in self._retained:
+            avail -= 1
+        return avail
+
     def can_reserve(self, n_tokens: int, slot: int | None = None,
-                    n_shared: int = 0) -> bool:
+                    n_shared: int = 0,
+                    match: "PrefixMatch" = NO_MATCH) -> bool:
         """Can a (possibly partially-grown) slot cover n_tokens total,
         with ``n_shared`` of its pages attached from the prefix cache?"""
         need = pages_for(n_tokens, self.page_size)
         if need > self.max_pages_per_seq:  # reserve() would refuse
             return False
         have = (len(self._owned[slot]) if slot is not None else 0) + n_shared
-        return need - have <= len(self._free)
+        return need - have <= self._avail_for(match)
 
     # -- alloc / free --------------------------------------------------
+    def _alloc_page(self, avoid: Tuple[int, ...] = ()) -> Optional[int]:
+        """One page off the free list, else evict the LRU retained prefix
+        page (its registry entries are dropped).  ``avoid`` pins pages
+        that must survive this allocation (a pending fork source).
+        Returns None when nothing is reclaimable."""
+        if self._free:
+            return self._free.pop()
+        for page in self._retained:
+            if page not in avoid:
+                del self._retained[page]
+                for kind, key in self._page_keys.pop(page, ()):
+                    (self._prefix if kind == "full" else self._tail).pop(
+                        key, None)
+                return page
+        return None
+
     def reserve(self, slot: int, n_tokens: int) -> None:
         """Grow `slot` to cover n_tokens logical tokens (idempotent)."""
         need = pages_for(n_tokens, self.page_size)
@@ -153,11 +209,11 @@ class PagedKVCache:
                 f"max_pages_per_seq={self.max_pages_per_seq}")
         owned = self._owned[slot]
         while len(owned) < need:
-            if not self._free:
+            page = self._alloc_page()
+            if page is None:
                 raise MemoryError(
                     f"page pool exhausted growing slot {slot} to "
                     f"{n_tokens} tokens")
-            page = self._free.pop()
             self.page_refs[page] = 1
             self.table[slot, len(owned)] = page
             owned.append(page)
@@ -182,6 +238,14 @@ class PagedKVCache:
         for page in owned:
             self.page_refs[page] -= 1
             if self.page_refs[page] == 0:
+                # materialized registered pages are RETAINED (LRU) so the
+                # prefix stays matchable after its last owner drains;
+                # pending pages (prefill never completed) and unregistered
+                # pages go straight back to the free list.
+                if (self.retain_prefixes and page in self._page_keys
+                        and page not in self._pending):
+                    self._retained[page] = None  # newest end of the LRU
+                    continue
                 for kind, key in self._page_keys.pop(page, ()):
                     (self._prefix if kind == "full" else self._tail).pop(
                         key, None)
@@ -259,18 +323,22 @@ class PagedKVCache:
             raise ValueError(
                 f"sequence of {n_tokens} tokens needs {need} pages > "
                 f"max_pages_per_seq={self.max_pages_per_seq}")
-        if need - len(match.shared) > len(self._free):
+        if need - len(match.shared) > self._avail_for(match):
             raise MemoryError(
                 f"page pool exhausted reserving slot {slot} "
                 f"({need} pages, {len(match.shared)} shared)")
         owned = self._owned[slot]
         for page in match.shared:
+            self._retained.pop(page, None)  # revive a drained prefix page
             self.table[slot, len(owned)] = page
             self.page_refs[page] += 1
             owned.append(page)
         forks: List[Tuple[int, int]] = []
         if match.fork_src is not None:
-            dst = self._free.pop()
+            # the fork source must survive until the engine's device copy
+            # runs; pin it against LRU eviction for the dst allocation
+            dst = self._alloc_page(avoid=(match.fork_src,))
+            assert dst is not None  # _avail_for accounted for the pin
             self.page_refs[dst] = 1
             self.table[slot, len(owned)] = dst
             owned.append(dst)
@@ -318,7 +386,15 @@ class PagedKVCache:
             self._page_keys.setdefault(page, []).append(("tail", tkey))
             self._pending.add(page)
 
+    def commit_pages(self, pages: Iterable[int]) -> None:
+        """Mark `pages` as materialized (their prefill chunks have all
+        been dispatched).  With multi-tick chunked prefill each slot
+        commits its own pages when its LAST chunk is planned; other
+        slots' mid-prefill pages stay pending (and defer matches)."""
+        for p in pages:
+            self._pending.discard(p)
+
     def commit_prefixes(self) -> None:
-        """Mark this admission round's registered pages as materialized
-        (their batched prefill has been dispatched)."""
+        """Mark EVERY registered page as materialized (single-dispatch
+        prefill callers; per-slot callers use ``commit_pages``)."""
         self._pending.clear()

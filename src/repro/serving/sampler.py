@@ -1,18 +1,28 @@
 """Token samplers for the serving engine.
 
-``sample_step`` is the engine's per-tick entry point: every row of the
-decode batch carries its own temperature / top-k / top-p (the per-request
-``SamplingParams``), vectorized so one call covers the whole batch.
-``apply_top_k`` / ``apply_top_p`` are the row-wise logit filters, exposed
-separately so tests can pin them against a reference implementation.
+``sample_step_keyed`` is the engine's per-tick entry point, fused INSIDE
+the jitted device step: every row of the decode batch carries its own
+temperature / top-k / top-p (the per-request ``SamplingParams``) plus its
+own rng key and generated-token index, so the sampled ids are a pure
+function of ``(request key, token index)`` — completely independent of
+which engine tick, slot, or batch composition produced them.  That is
+what makes the overlapped (dispatch-ahead) engine loop token-for-token
+identical to the synchronous one, and preemption/resume regenerate the
+same continuation.  ``sample_step`` is the single-key variant kept for
+direct callers; ``apply_top_k`` / ``apply_top_p`` are the row-wise logit
+filters, exposed separately so tests can pin them against a reference
+implementation.
 """
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 import jax.numpy as jnp
 
-__all__ = ["greedy", "sample", "sample_step", "apply_top_k", "apply_top_p"]
+__all__ = ["greedy", "sample", "sample_step", "sample_step_keyed",
+           "request_key", "apply_top_k", "apply_top_p"]
 
 _MASKED = -1e9  # filtered logits (matches the vocab-padding mask value)
 
@@ -83,4 +93,36 @@ def sample_step(logits: jax.Array, rng: jax.Array, temperature, top_k,
     safe_t = jnp.where(t > 0, t, 1.0)[:, None]
     l = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
     c = jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+    return jnp.where(t > 0, c, g)
+
+
+def request_key(seed: int, rid: int) -> np.ndarray:
+    """Deterministic per-request raw key data, derived on the HOST (no
+    device work at admission time).  The engine folds the generated-token
+    index in on-device, so sampling is a pure function of (seed, rid,
+    index) — identical under sync/overlapped loops, slot reassignment,
+    and preemption/resume."""
+    return np.random.SeedSequence(entropy=(int(seed), int(rid))).generate_state(
+        2, dtype=np.uint32)
+
+
+def sample_step_keyed(logits, keys, index, temperature, top_k, top_p):
+    """Per-row keyed sampling for one engine tick (fused into the step).
+
+    logits: (B, V); keys: (B, 2) uint32 raw per-request key data;
+    index: (B,) int32 generated-token index being sampled;
+    temperature/top_k/top_p: (B,).  Rows with temperature <= 0 are greedy
+    and never consume randomness; the rest filter then draw categorically
+    from ``fold_in(key, index)`` — their draws do not depend on tick
+    scheduling or on which other rows share the batch.
+    """
+    g = greedy(logits)
+    t = jnp.asarray(temperature, jnp.float32)
+    safe_t = jnp.where(t > 0, t, 1.0)[:, None]
+    l = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
+
+    def draw(key, i, row):
+        return jax.random.categorical(jax.random.fold_in(key, i), row)
+
+    c = jax.vmap(draw)(keys, index.astype(jnp.int32), l).astype(jnp.int32)
     return jnp.where(t > 0, c, g)

@@ -1,0 +1,484 @@
+"""Host-side serving scheduler: admission, preemption, finish detection,
+and page planning — NO device work.
+
+The serving core is split into three parts (ISSUE 4 / ROADMAP "async /
+overlapped engine loop"):
+
+  * ``Scheduler`` (this module) — pure host state machine.  It owns the
+    request queue, the slot table, the ``PagedKVCache`` allocator, and
+    every per-slot numpy array the device step consumes.  One call to
+    ``plan_tick()`` produces a ``TickPlan``: which requests admit (and
+    which COW pages fork), the chunk of prompt each PREFILLING slot
+    advances by this tick, and the decode batch (positions, page-table
+    snapshot, sampling-parameter rows, per-request rng keys).  Planning
+    NEVER reads a device value — everything it needs (positions, page
+    counts, token budgets) is host-derivable, which is exactly what lets
+    the engine dispatch tick ``t+1`` before reading tick ``t``.
+
+  * the fused device step (``engine.py``) — consumes a ``TickPlan``,
+    runs per-layer ``backend.paged_decode`` + cache write + vectorized
+    keyed sampling inside ONE jit, and returns sampled token ids: the
+    only per-tick readback.
+
+  * the loop (``engine.py``) — sync (read every tick) or overlapped
+    (dispatch-ahead: host visibility of token VALUES is deferred one
+    tick; value-dependent events — stop tokens — are detected on
+    ``ingest`` and at most one extra "zombie" tick runs for a stopped
+    slot, writing only into pages that slot still owns).
+
+Continuous chunked-prefill batching: a PREFILLING slot advances by
+``prefill_slice`` tokens per tick (page-sized chunks) while DECODING
+slots keep ticking — admission is no longer a stop-the-world batched
+prefill.  ``prefill_slice=None`` prefills the whole suffix in the
+admission tick (the classic regime).
+
+Token attribution is positional, not slot-based: every dispatched sample
+carries an ``Emit(slot, req, index)`` record, so tokens read back later
+still reach the right request even if the slot was preempted, drained,
+or reassigned in the meantime — and per-request ``(rid, index)`` rng
+keys (``sampler.request_key``) make the sampled values independent of
+tick scheduling entirely.
+"""
+
+from __future__ import annotations
+
+from typing import List, NamedTuple, Optional, Tuple
+
+import numpy as np
+
+from repro.serving import sampler as S
+from repro.serving.kv_cache import (NO_MATCH, TRASH_PAGE, PagedKVCache,
+                                    pages_for)
+from repro.serving.request import Request, RequestOutput, RequestState
+
+__all__ = ["Admission", "Emit", "PrefillChunk", "DecodeTick", "TickPlan",
+           "Scheduler"]
+
+
+class Admission(NamedTuple):
+    """One scheduling decision: where a request lands and what it shares."""
+
+    slot: int
+    req: Request
+    resume_from: int  # generated tokens carried across a preemption
+    matched: int  # prefix tokens served from shared pages (0 = none)
+    forks: Tuple[Tuple[int, int], ...]  # (src, dst) COW page copies
+
+
+class Emit(NamedTuple):
+    """Attribution of one dispatched sample: generated-token ``index`` of
+    ``req``, computed in batch row ``slot`` at dispatch time."""
+
+    slot: int
+    req: Request
+    index: int
+
+
+class PrefillChunk(NamedTuple):
+    """One tick's prefill work: each PREFILLING row advances by one chunk
+    of its (suffix of) prompt; rows with ``lens == 0`` are inactive and
+    write to the trash page."""
+
+    tokens: np.ndarray  # (B, S) right-padded chunk batch
+    lens: np.ndarray  # (B,) TOTAL valid tokens after this chunk (0 = idle)
+    offsets: np.ndarray  # (B,) first position written this chunk
+    scale_base: np.ndarray  # (B,) k_scale origin (prefix-sharing offset)
+    table: np.ndarray  # (B, P) page-table snapshot, idle rows trashed
+    sample_index: np.ndarray  # (B,) generated-token index sampled per row
+    hot: bool  # any completing row samples with temperature > 0
+    emit: Tuple[Emit, ...]  # completing rows: first-token attribution
+
+
+class DecodeTick(NamedTuple):
+    """One tick's decode work over every DECODING row."""
+
+    pos: np.ndarray  # (B,) position written this tick
+    kv_len: np.ndarray  # (B,) pos+1 for live rows, 0 for inert rows
+    base: np.ndarray  # (B,) prefix-sharing offset
+    table: np.ndarray  # (B, P) page-table snapshot, inert rows trashed
+    sample_index: np.ndarray  # (B,) generated-token index sampled per row
+    live: np.ndarray  # (B,) bool — rows decoding this tick
+    fresh: np.ndarray  # (B,) bool — input token comes from THIS tick's
+    #                     prefill sample (first decode after admission)
+    hot: bool  # any live row samples with temperature > 0
+    emit: Tuple[Emit, ...]
+
+
+class TickPlan(NamedTuple):
+    """Everything the device step needs for one tick, host-computed."""
+
+    forks: Tuple[Tuple[int, int], ...]  # COW copies, dispatched first
+    prefill: Optional[PrefillChunk]
+    decode: Optional[DecodeTick]
+    keys: np.ndarray  # (B, 2) uint32 per-request raw rng key data
+    temps: np.ndarray  # (B,) float32 per-slot sampling params
+    top_ks: np.ndarray  # (B,) int32
+    top_ps: np.ndarray  # (B,) float32
+
+
+class Scheduler:
+    """Admission policy + per-tick work planning, host-pure.
+
+    Mutates allocator state (reservations, refcounts, fork page ids) and
+    per-slot numpy arrays, but runs NO model computation and reads NO
+    device values.  The engine feeds sampled tokens back through
+    ``ingest`` (token values are the ONLY device-derived input), which
+    appends them to their requests, detects stop/length finishes, and
+    retires slots.
+    """
+
+    def __init__(self, kv: PagedKVCache, *, max_batch: int, max_len: int,
+                 seed: int = 0, prefix_sharing: bool = True,
+                 prefill_slice: Optional[int] = None,
+                 prefill_bucket: int = 16):
+        self.kv = kv
+        self.max_batch, self.max_len = max_batch, max_len
+        self.seed = seed
+        self.prefix_sharing = prefix_sharing
+        if prefill_slice is not None and prefill_slice < 1:
+            raise ValueError(f"prefill_slice must be >= 1, got {prefill_slice}")
+        self.prefill_slice = prefill_slice
+        self.prefill_bucket = prefill_bucket
+
+        self.queue: List[Request] = []
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.done: List[Request] = []
+        self.peak_pages = 0  # high-water mark of actively-owned pages
+
+        b = max_batch
+        self.pos = np.zeros(b, np.int32)  # next decode position per slot
+        self.base = np.zeros(b, np.int32)  # prefix-sharing offset per slot
+        self.progress = np.zeros(b, np.int32)  # prompt tokens materialized
+        self.dispatched = np.zeros(b, np.int32)  # generated tokens dispatched
+        self.max_toks = np.zeros(b, np.int32)  # generation budget per slot
+        self.temps = np.zeros(b, np.float32)
+        self.top_ks = np.zeros(b, np.int32)
+        self.top_ps = np.ones(b, np.float32)
+        self.keys = np.zeros((b, 2), np.uint32)
+
+        self._next_rid = 0
+        self._arrival = 0  # FIFO tiebreak within a priority class
+        self._admissions = 0  # preemption tiebreak (evict newest first)
+        self._inflight_total = 0  # dispatched samples not yet ingested
+        self._pending_forks: List[Tuple[int, int]] = []  # COW copies due
+        # drain-released requests (slot freed at plan time) whose final
+        # token is still in flight: not queued, not active, but LIVE —
+        # cancel() must still reach them
+        self._retiring: List[Request] = []
+
+    # ------------------------------------------------------------------
+    # submission / cancellation
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> int:
+        """Queue a request; returns its rid (auto-assigned when None)."""
+        if getattr(req, "_inflight", 0):
+            raise ValueError(
+                f"request {req.rid} still has in-flight dispatched work")
+        if req.rid is None:
+            req.rid = self._next_rid
+        self._next_rid = max(self._next_rid, req.rid + 1)
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        need = len(req.prompt) + req.sampling.max_new
+        if need > self.max_len:
+            raise ValueError(
+                f"request {req.rid}: prompt+max_new {need} > max_len "
+                f"{self.max_len}")
+        req.state = RequestState.QUEUED
+        req.tokens = []
+        req.finish_reason = None
+        req._seq = self._arrival  # FIFO order, kept across preemption
+        req._inflight = 0
+        self._arrival += 1
+        self.queue.append(req)
+        return req.rid
+
+    def cancel(self, rid: int) -> Optional[RequestOutput]:
+        """Terminate a queued or running request NOW; running requests
+        free their pages immediately (in-flight dispatched samples for it
+        are discarded at ingest).  Returns the final output record, or
+        None if rid is not live."""
+        for qi, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(qi)
+                return self._finish_now(r, "cancelled")
+        for slot, r in enumerate(self.active):
+            if r is not None and r.rid == rid:
+                self.kv.release(slot)
+                self.active[slot] = None
+                return self._finish_now(r, "cancelled")
+        for r in self._retiring:  # slot drained, final token in flight
+            if r.rid == rid:
+                self._retiring.remove(r)
+                return self._finish_now(r, "cancelled")
+        return None
+
+    def _finish_now(self, req: Request, reason: str) -> RequestOutput:
+        req.state = (RequestState.CANCELLED if reason == "cancelled"
+                     else RequestState.FINISHED)
+        req.finish_reason = reason
+        self.done.append(req)
+        out = RequestOutput(
+            rid=req.rid, token=None, index=len(req.tokens), state=req.state,
+            finished=True, finish_reason=reason, tokens=tuple(req.tokens))
+        if req.on_token:
+            req.on_token(out)
+        return out
+
+    # ------------------------------------------------------------------
+    # admission policy
+    # ------------------------------------------------------------------
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.active)
+
+    @property
+    def has_prefilling(self) -> bool:
+        return any(r is not None and r.state is RequestState.PREFILLING
+                   for r in self.active)
+
+    def _max_tokens_of(self, req: Request) -> int:
+        return min(req.sampling.max_new, self.max_len - len(req.prompt))
+
+    def _next_queued_index(self) -> int:
+        return min(range(len(self.queue)),
+                   key=lambda i: (-self.queue[i].priority,
+                                  self.queue[i]._seq))
+
+    def _pick_victim(self, priority: int) -> Optional[int]:
+        """Lowest-priority DECODING slot strictly below `priority`; among
+        equals, the most recently admitted (least prefill to redo)."""
+        best = None
+        for slot, r in enumerate(self.active):
+            # only DECODING slots are evictable: preempting a PREFILLING
+            # slot would discard partially-materialized chunks for no gain
+            if (r is None or r.state is not RequestState.DECODING
+                    or r.priority >= priority):
+                continue
+            key = (r.priority, -r._admit_seq)
+            if best is None or key < best[0]:
+                best = (key, slot)
+        return None if best is None else best[1]
+
+    def _preempt(self, slot: int) -> None:
+        req = self.active[slot]
+        self.kv.release(slot)  # sharers keep refcounted pages alive
+        self.active[slot] = None
+        req.state = RequestState.QUEUED  # tokens kept: resume re-prefills
+        self.queue.append(req)  # _seq unchanged: keeps its FIFO standing
+
+    def admit(self) -> List[Admission]:
+        """Fill free slots from the queue, matching shared prefixes and
+        preempting lower-priority decoders under page pressure.  Mutates
+        allocator state but runs NO model computation — the tick's
+        prefill chunks consume the resulting PREFILLING slots."""
+        admitted: List[Admission] = []
+        while self.queue:
+            qi = self._next_queued_index()
+            req = self.queue[qi]
+            if req._inflight:
+                # a preempted request's last dispatched token has not been
+                # ingested yet (overlapped loop): re-admitting now would
+                # both replay it via re-prefill AND append it at ingest
+                break
+            effective = req.prompt + req.tokens  # resume covers generated
+            need = len(req.prompt) + req.sampling.max_new
+            match = (self.kv.match_prefix(effective)
+                     if self.prefix_sharing else NO_MATCH)
+            if match.defer:
+                break  # prefix pages materialize soon; retry next tick
+            slot = next(
+                (i for i, r in enumerate(self.active) if r is None), None)
+            if slot is None or not self.kv.can_reserve(
+                    need, slot, n_shared=len(match.shared), match=match):
+                victim = self._pick_victim(req.priority)
+                if victim is None:
+                    break  # page pressure: wait for retirements
+                self._preempt(victim)
+                continue  # re-match: the release may have dropped pages
+            self.queue.pop(qi)
+            forks = self.kv.reserve_shared(slot, match, need)
+            if self.prefix_sharing:
+                self.kv.register_prefix(slot, effective)
+            req.state = RequestState.PREFILLING
+            req.prefix_matched = match.matched
+            req._admit_seq = self._admissions
+            self._admissions += 1
+            self.active[slot] = req  # slot is taken from this point on
+            self.base[slot] = match.matched
+            self.progress[slot] = match.matched
+            self.dispatched[slot] = len(req.tokens)
+            self.max_toks[slot] = self._max_tokens_of(req)
+            sp = req.sampling
+            self.temps[slot] = sp.temperature
+            self.top_ks[slot] = sp.top_k
+            self.top_ps[slot] = sp.top_p
+            self.keys[slot] = S.request_key(self.seed, req.rid)
+            self._pending_forks.extend(forks)  # drained by plan_tick
+            admitted.append(Admission(
+                slot, req, len(req.tokens), match.matched, tuple(forks)))
+        if (not admitted and self.queue and self._inflight_total == 0
+                and all(r is None for r in self.active)):
+            req = self.queue[self._next_queued_index()]
+            raise MemoryError(
+                f"request {req.rid} needs "
+                f"{pages_for(len(req.prompt) + req.sampling.max_new, self.kv.page_size)}"
+                f" pages; pool has {self.kv.n_pages - 1}")
+        self.peak_pages = max(self.peak_pages, self.kv.used_pages)
+        return admitted
+
+    # legacy spelling (the seed-era engine API)
+    schedule = admit
+
+    # ------------------------------------------------------------------
+    # per-tick work planning
+    # ------------------------------------------------------------------
+    def _drain_dispatched(self) -> None:
+        """Release slots whose requests have dispatched their full token
+        budget (a length finish is host-plannable): the pages free for
+        this tick's admissions even though the final token value has not
+        been read yet.  Ingest finishes the request when it arrives."""
+        for slot, r in enumerate(self.active):
+            if (r is not None and r.state is RequestState.DECODING
+                    and self.dispatched[slot] >= self.max_toks[slot]):
+                self.kv.release(slot)
+                self.active[slot] = None
+                self._retiring.append(r)
+
+    def _plan_prefill(self) -> Optional[PrefillChunk]:
+        slots = [i for i, r in enumerate(self.active)
+                 if r is not None and r.state is RequestState.PREFILLING]
+        if not slots:
+            return None
+        b = self.max_batch
+        chunks = {}
+        for i in slots:
+            r = self.active[i]
+            eff = r.prompt + r.tokens
+            remaining = len(eff) - int(self.progress[i])
+            take = (remaining if self.prefill_slice is None
+                    else min(remaining, self.prefill_slice))
+            chunks[i] = eff[self.progress[i]:self.progress[i] + take]
+        if self.prefill_slice is None:
+            maxs = max(len(c) for c in chunks.values())
+            s = min(-(-maxs // self.prefill_bucket) * self.prefill_bucket,
+                    self.max_len)
+        else:
+            s = min(self.prefill_slice, self.max_len)
+        tokens = np.zeros((b, s), np.int32)
+        lens = np.zeros(b, np.int32)
+        offsets = np.zeros(b, np.int32)
+        scale_base = np.zeros(b, np.int32)
+        sample_index = np.zeros(b, np.int32)
+        emit: List[Emit] = []
+        hot = False
+        for i in slots:
+            r = self.active[i]
+            chunk = chunks[i]
+            tokens[i, :len(chunk)] = chunk
+            offsets[i] = self.progress[i]
+            scale_base[i] = self.base[i]
+            lens[i] = self.progress[i] + len(chunk)
+            self.progress[i] += len(chunk)
+            if self.progress[i] == len(r.prompt) + len(r.tokens):
+                # last chunk: this row samples its first generated token
+                r.state = RequestState.DECODING
+                self.pos[i] = self.progress[i]
+                sample_index[i] = self.dispatched[i]
+                emit.append(Emit(i, r, int(self.dispatched[i])))
+                r._inflight += 1
+                self._inflight_total += 1
+                self.dispatched[i] += 1
+                hot = hot or self.temps[i] > 0
+                self.kv.commit_pages(self.kv.owned(i))
+        table = np.where(lens[:, None] > 0, self.kv.table, TRASH_PAGE)
+        return PrefillChunk(tokens, lens, offsets, scale_base, table,
+                            sample_index, bool(hot), tuple(emit))
+
+    def _plan_decode(self, fresh_slots: Tuple[int, ...]) -> Optional[DecodeTick]:
+        live = [i for i, r in enumerate(self.active)
+                if (r is not None and r.state is RequestState.DECODING
+                    and self.dispatched[i] < self.max_toks[i])]
+        if not live:
+            return None
+        b = self.max_batch
+        live_mask = np.zeros(b, bool)
+        live_mask[live] = True
+        fresh = np.zeros(b, bool)
+        fresh[[i for i in fresh_slots if live_mask[i]]] = True
+        pos = self.pos.copy()
+        kv_len = np.where(live_mask, self.pos + 1, 0).astype(np.int32)
+        table = np.where(live_mask[:, None], self.kv.table, TRASH_PAGE)
+        sample_index = self.dispatched.copy()
+        emit = []
+        hot = False
+        for i in live:
+            r = self.active[i]
+            emit.append(Emit(i, r, int(self.dispatched[i])))
+            r._inflight += 1
+            self._inflight_total += 1
+            self.dispatched[i] += 1
+            self.pos[i] += 1
+            hot = hot or self.temps[i] > 0
+        return DecodeTick(pos, kv_len, self.base.copy(), table, sample_index,
+                          live_mask, fresh, bool(hot), tuple(emit))
+
+    def plan_tick(self, *, admit: bool = True,
+                  decode: bool = True) -> TickPlan:
+        """Plan one engine tick: admissions + one prefill chunk per
+        PREFILLING slot + one decode step per DECODING slot.  Host-pure;
+        the engine dispatches the plan and (eventually) feeds the sampled
+        tokens back through ``ingest``."""
+        self._drain_dispatched()
+        if admit:
+            self.admit()
+        # forks accumulate on admission (whether via plan_tick or a
+        # direct schedule() call) and dispatch ONCE, before any write
+        forks, self._pending_forks = self._pending_forks, []
+        prefill = self._plan_prefill()
+        dec = (self._plan_decode(tuple(e.slot for e in prefill.emit)
+                                 if prefill else ())
+               if decode else None)
+        return TickPlan(tuple(forks), prefill, dec, self.keys.copy(),
+                        self.temps.copy(), self.top_ks.copy(),
+                        self.top_ps.copy())
+
+    # ------------------------------------------------------------------
+    # host visibility (the only device-derived input)
+    # ------------------------------------------------------------------
+    def ingest(self, emit: Emit, token: int) -> Optional[RequestOutput]:
+        """Record one sampled token read back from the device.  Appends
+        it to its request, detects stop/length finishes, retires the slot
+        (unless it was already drain-released or preempted), and emits
+        the streamed output.  Returns None for discarded samples: the
+        request was cancelled, or already finished on an earlier stop
+        token (the overlapped loop's zombie tick)."""
+        slot, req, idx = emit
+        req._inflight -= 1
+        self._inflight_total -= 1
+        if req.state.is_terminal or idx != len(req.tokens):
+            return None  # cancelled / stopped earlier: drop the sample
+        req.tokens.append(token)
+        reason = None
+        if token in req.sampling.stop:
+            reason = "stop"
+        elif len(req.tokens) >= self._max_tokens_of(req):
+            reason = "length"
+        if reason is not None:
+            req.state = RequestState.FINISHED
+            req.finish_reason = reason
+            if self.active[slot] is req:  # not drained / reassigned
+                self.kv.release(slot)
+                self.active[slot] = None
+            elif req in self.queue:  # preempted, finished by its last token
+                self.queue.remove(req)
+            elif req in self._retiring:  # drain-released at plan time
+                self._retiring.remove(req)
+            self.done.append(req)
+        out = RequestOutput(
+            rid=req.rid, token=token, index=len(req.tokens),
+            state=req.state, finished=reason is not None,
+            finish_reason=reason, tokens=tuple(req.tokens))
+        if req.on_token:
+            req.on_token(out)
+        return out

@@ -1,5 +1,5 @@
 """AttentionBackend API: registry semantics, config-level backend
-resolution (incl. the deprecated attn_mode alias), and the per-layer
+resolution (incl. the removed attn_mode alias erroring), and the per-layer
 backend policy — mixed dense/camformer stacks must round-trip cache
 specs, prefill, decode, and serve end-to-end through the single paged
 ServeEngine with both page layouts live in the same pool."""
@@ -57,49 +57,37 @@ def test_registry_round_trip():
     assert get_backend("probe").name == "probe"
 
 
-def test_attn_mode_alias_warns_and_conflicts_raise():
-    """The deprecation contract of the seed-era spelling: setting
-    attn_mode still WORKS (resolves through cfg.backend) but emits a
-    DeprecationWarning at config construction, and a disagreeing
-    attn_mode + attn_backend pair is a loud error, never a silent
-    precedence."""
+def test_attn_mode_alias_removed_is_clean_error():
+    """The seed-era attn_mode spelling (deprecated in PR 2-3) is removed:
+    stale replace(attn_mode=...) call sites fail at config construction
+    with a message pointing at attn_backend, never a silent no-op or an
+    opaque TypeError.  The canonical spelling stays warning-free."""
     cfg = smoke_config("codeqwen1.5-7b")
-    with pytest.warns(DeprecationWarning, match="attn_mode"):
-        aliased = cfg.replace(attn_mode="camformer")
-    assert aliased.backend == "camformer"
-    assert aliased.backend_for(0) == "camformer"
-    with pytest.raises(ValueError, match="conflicting"):
+    with pytest.raises(ValueError, match="attn_mode.*removed"):
+        cfg.replace(attn_mode="camformer")
+    with pytest.raises(ValueError, match="attn_backend"):
         cfg.replace(attn_mode="binary", attn_backend="camformer")
-    # the canonical spelling stays silent
     with warnings.catch_warnings():
-        warnings.simplefilter("error", DeprecationWarning)
+        warnings.simplefilter("error")
         assert cfg.replace(attn_backend="binary").backend == "binary"
 
 
-def test_cli_attn_mode_alias_warns_and_conflicts_exit():
+def test_cli_attn_mode_flag_removed_is_clean_error():
     ap = argparse.ArgumentParser()
     add_backend_args(ap)
     args = ap.parse_args(["--attn-mode", "camformer"])
-    with pytest.warns(DeprecationWarning, match="--attn-mode"):
-        cfg = apply_backend_args(smoke_config("codeqwen1.5-7b"), args)
-    assert cfg.backend == "camformer"
-    args = ap.parse_args(["--attn-mode", "binary", "--backend", "camformer"])
-    with pytest.raises(SystemExit, match="conflicting"):
+    with pytest.raises(SystemExit, match="removed.*--backend camformer"):
         apply_backend_args(smoke_config("codeqwen1.5-7b"), args)
+    # the canonical flag still routes
+    args = ap.parse_args(["--backend", "camformer"])
+    assert apply_backend_args(
+        smoke_config("codeqwen1.5-7b"), args).backend == "camformer"
 
 
-def test_config_backend_resolution_and_alias():
+def test_config_backend_resolution():
     cfg = smoke_config("codeqwen1.5-7b")
     assert cfg.backend == "dense"
-    # deprecated alias still routes
-    assert cfg.replace(attn_mode="camformer").backend == "camformer"
-    # agreeing spellings coexist; a DISAGREEING alias is a loud error,
-    # not a silent precedence (ablation replace(attn_mode=...) calls must
-    # never become no-ops)
-    assert cfg.replace(attn_mode="camformer",
-                       attn_backend="camformer").backend == "camformer"
-    with pytest.raises(ValueError, match="conflicting"):
-        cfg.replace(attn_mode="binary", attn_backend="camformer")
+    assert cfg.replace(attn_backend="camformer").backend == "camformer"
     # typed per-layer accessor: uniform...
     assert cfg.backend_for(1) == "dense"
     assert cfg.uniform_backend == "dense"

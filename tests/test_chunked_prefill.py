@@ -18,7 +18,7 @@ _IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
 
 
 def _setup(mode):
-    cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode=mode)
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend=mode)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab,

@@ -60,7 +60,7 @@ def test_prefill_decode_smoke(arch, mode):
     if mode == "camformer":
         if cfg.family == "ssm":
             pytest.skip("attention-free (DESIGN.md §Arch-applicability)")
-        cfg = cfg.replace(attn_mode="camformer")
+        cfg = cfg.replace(attn_backend="camformer")
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), KEY)
     caches = zero_caches(md, cfg, B, CACHE)

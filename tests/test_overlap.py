@@ -1,0 +1,288 @@
+"""Overlapped serving loop correctness: the dispatch-ahead engine must be
+token-for-token identical to the synchronous loop (same per-request rng,
+same per-request tick schedule) across backends, including under
+continuous chunked prefill, one-tick-deferred stop/length finishes,
+priority preemption, and mid-stream cancellation — plus the
+one-readback-per-decode-tick invariant the overlap win rests on.
+
+Per the decode tolerance policy: every comparison here is SAME-PATH
+(identical dispatch structure, only the readback timing differs), so
+equality is exact for every backend — no tolerances."""
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import (Request, RequestState, SamplingParams,
+                           ServeEngine)
+
+_SLOW = pytest.mark.slow
+
+
+def _cfg(backend=None, layer_backends=None, **kw):
+    cfg = smoke_config("codeqwen1.5-7b")
+    if layer_backends:
+        kw["n_layers"] = max(cfg.n_layers, len(layer_backends))
+    return cfg.replace(attn_backend=backend, layer_backends=layer_backends,
+                       **kw)
+
+
+def _engine(cfg, **kw):
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    return ServeEngine(md, cfg, params, **kw)
+
+
+def _drained(eng):
+    return (eng.kv.free_pages == eng.kv.n_pages - 1
+            and eng.sched._inflight_total == 0)
+
+
+# ---------------------------------------------------------------------------
+# the overlap-equivalence matrix (ISSUE 4 acceptance): overlapped mode ==
+# sync mode token-for-token for dense / camformer / mixed stacks, with
+# continuous chunked prefill and COW prefix sharing in the mix
+
+
+@pytest.mark.parametrize("backend,layer_backends", [
+    ("dense", None),
+    pytest.param("camformer", None, marks=_SLOW),
+    pytest.param(None, ("dense", "camformer"), marks=_SLOW),
+])
+def test_overlap_equals_sync_token_for_token(backend, layer_backends):
+    cfg = _cfg(backend, layer_backends)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    shared = list(range(30, 42))  # shared prefix: COW sharing + defer
+    prompts = ([shared + [i, i + 2] for i in (3, 7)]
+               + [[9, 1, 4], [2, 2, 6, 1, 8]])  # more requests than slots
+
+    def gen(mode):
+        # prefill_slice=8: admission prefills in page-sized chunks across
+        # ticks while resident slots keep decoding (continuous batching)
+        eng = ServeEngine(md, cfg, params, max_batch=3, max_len=64,
+                          page_size=8, mode=mode, prefill_slice=8)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(prompt=list(p),
+                               sampling=SamplingParams(max_new=5), rid=i))
+        got, finished = {}, {}
+        for out in eng.stream():
+            got.setdefault(out.rid, []).append(out.token)
+            finished[out.rid] = out.finished
+        assert _drained(eng)
+        return got, finished
+
+    want, want_done = gen("sync")
+    got, got_done = gen("overlap")
+    assert got == want  # token-for-token, exact, every backend
+    assert all(got_done.values()) and all(want_done.values())
+    assert set(got) == set(range(len(prompts)))
+
+
+# ---------------------------------------------------------------------------
+# one-tick-deferred visibility: stop-token and max_new finishes never
+# surface extra tokens (the overlapped loop's zombie tick is discarded)
+
+
+@pytest.mark.parametrize("mode", ["sync", "overlap"])
+def test_stop_token_deferred_visibility_no_extra_tokens(mode):
+    probe = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=6))
+    eng = _engine(_cfg(), mode=mode)
+    eng.submit(probe)
+    eng.run()
+    assert len(probe.tokens) == 6  # max_new finish, exact count
+    stop_tok = probe.tokens[2]
+
+    eng2 = _engine(_cfg(), mode=mode)
+    req = Request(prompt=[5, 9, 2],
+                  sampling=SamplingParams(max_new=6, stop=(stop_tok,)))
+    outs = list(eng2.stream(req))
+    # the stop finish is only VISIBLE one tick after it was dispatched in
+    # overlap mode — the zombie tick's sample must be discarded, never
+    # surfaced as a token or an event
+    assert req.finish_reason == "stop"
+    assert req.tokens == probe.tokens[:3]  # stop token kept, nothing after
+    assert [o.token for o in outs] == req.tokens
+    assert [o.finished for o in outs] == [False, False, True]
+    assert _drained(eng2)
+
+
+def test_max_new_finish_is_plan_exact_under_overlap():
+    """Length finishes are host-plannable: the overlapped loop must not
+    even dispatch a zombie tick for them — dispatched count == surfaced
+    count == max_new."""
+    eng = _engine(_cfg(), mode="overlap")
+    reqs = [Request(prompt=[5, 9, 2 + i], sampling=SamplingParams(max_new=n))
+            for i, n in enumerate((1, 3, 6))]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    for r, n in zip(reqs, (1, 3, 6)):
+        assert len(r.tokens) == n and r.finish_reason == "length"
+    # ticks: all three decode in lockstep; the longest needs max_new-1=5
+    # decode dispatches after its prefill-sampled first token
+    assert eng.ticks == 5
+    assert _drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# exactly one host<->device readback per decode tick (sampled token ids)
+
+
+def test_single_readback_per_decode_tick():
+    eng = _engine(_cfg(), mode="overlap")
+    eng.submit(Request(prompt=[5, 9, 2, 4],
+                       sampling=SamplingParams(max_new=6)))
+    for out in eng.stream():
+        pass
+    # 1 prefill-completion read (first token) + one read per decode tick
+    assert eng.ticks == 5
+    assert eng.readbacks == 1 + eng.ticks
+    # the double-buffered token state stays on device between ticks
+    assert isinstance(eng._tok_buf, jax.Array)
+
+
+def test_sampling_is_fused_into_the_step_jit():
+    """The decode jit's first output is the sampled ids themselves —
+    sampling happens inside the step, not on logits read back host-side."""
+    eng = _engine(_cfg(), mode="sync")
+    eng.submit(Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=3)))
+    plan = eng.sched.plan_tick()
+    inflight = eng._dispatch(plan)
+    tok = inflight.decode_tok
+    assert tok.shape == (eng.max_batch,) and tok.dtype.name == "int32"
+    eng._collect(inflight)
+    eng.run()
+
+
+# ---------------------------------------------------------------------------
+# continuous chunked-prefill batching: a joining request prefills in
+# page-sized chunks across ticks while resident slots keep decoding
+
+
+def test_chunked_prefill_interleaves_with_decode():
+    eng = _engine(_cfg(), max_batch=2, mode="sync", prefill_slice=8)
+    a = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=12))
+    eng.submit(a)
+    eng.step()  # a admitted (whole 3-token prompt is one chunk) + decoding
+    assert a.state is RequestState.DECODING
+    b = Request(prompt=list(range(100, 130)),  # 30 tokens: 4 chunks of 8
+                sampling=SamplingParams(max_new=4))
+    eng.submit(b)
+    for expect_prefilling in (True, True, True, False):
+        before = len(a.tokens)
+        eng.step()
+        assert len(a.tokens) == before + 1  # a KEPT decoding every tick
+        assert (b.state is RequestState.PREFILLING) == expect_prefilling
+    assert b.state is RequestState.DECODING and len(b.tokens) >= 1
+    eng.run()
+    assert len(a.tokens) == 12 and len(b.tokens) == 4
+    assert _drained(eng)
+
+
+# ---------------------------------------------------------------------------
+# preemption + mid-stream cancel under the overlapped loop
+
+
+@pytest.mark.parametrize("backend", [
+    "dense", pytest.param("camformer", marks=_SLOW)])
+def test_preemption_equivalence_across_modes(backend):
+    """Page-pressure preemption from an identical mid-generation state
+    resumes to the same final tokens in sync and overlapped mode (the
+    recompute resume path is the same in both)."""
+    cfg = _cfg(backend)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+
+    def gen(mode):
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                          page_size=8, n_pages=5, prefix_sharing=False,
+                          mode=mode)
+        lo = Request(prompt=[1, 2, 3, 4, 5, 6],
+                     sampling=SamplingParams(max_new=18), rid=0, priority=0)
+        eng.submit(lo)
+        eng.step()  # sync ticks: identical mid-generation state either mode
+        eng.step()
+        assert lo.state is RequestState.DECODING and len(lo.tokens) >= 2
+        kept = list(lo.tokens)
+        hi = Request(prompt=[9, 8, 7, 6, 5, 4],
+                     sampling=SamplingParams(max_new=18), rid=1, priority=5)
+        eng.submit(hi)
+        done = eng.run()  # mode-specific loop: hi preempts lo, lo resumes
+        assert {r.rid for r in done} == {0, 1}
+        assert all(len(r.tokens) == 18 for r in done)
+        assert lo.tokens[:len(kept)] == kept  # resume continued, no restart
+        assert _drained(eng)
+        return {r.rid: r.tokens for r in done}
+
+    assert gen("overlap") == gen("sync")
+
+
+def test_cancel_with_inflight_dispatched_tick():
+    """cancel() of a slot whose tick is dispatched-but-unread: the pages
+    free immediately, in-flight samples for it are discarded (no token
+    events after the cancel record), and the surviving slot's stream is
+    unperturbed (row independence)."""
+    cfg = _cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+
+    def build():
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64,
+                          page_size=8, mode="overlap")
+        a = Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=10),
+                    rid=0)
+        b = Request(prompt=[4, 5, 6], sampling=SamplingParams(max_new=10),
+                    rid=1)
+        return eng, a, b
+
+    eng, a, b = build()
+    stream = eng.stream(a, b)
+    events = []
+    while len(a.tokens) < 3:  # overlap: a tick beyond this is in flight
+        events.append(next(stream))
+    assert eng.sched._inflight_total > 0  # the dispatched-but-unread tick
+    out = eng.cancel(a.rid)
+    assert out.finished and a.state is RequestState.CANCELLED
+    assert eng.kv.used_pages < 2 * eng.kv.table.shape[1]  # pages freed NOW
+    n_at_cancel = len(a.tokens)
+    remaining = list(stream)  # drain
+    assert len(a.tokens) == n_at_cancel  # in-flight samples discarded
+    assert not any(o.rid == a.rid for o in remaining)  # no a-events after
+    assert b.finish_reason == "length" and len(b.tokens) == 10
+    assert _drained(eng)
+
+    # row independence: b's stream matches a run without the cancel
+    ctrl, _, cb = build()
+    ctrl.submit(cb)
+    ctrl.run()
+    assert b.tokens == cb.tokens
+
+
+def test_cancel_reaches_drain_released_request():
+    """A request whose slot was drain-released at plan time (final token
+    dispatched but unread) is still cancellable: cancel() must find it in
+    the retiring set, not silently return None and later surface a
+    finished event."""
+    eng = _engine(_cfg(), mode="overlap")
+    a = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=4), rid=0)
+    stream = eng.stream(a)
+    events = [next(stream)]
+    while len(a.tokens) < 3:  # final (4th) token dispatched ahead, unread
+        events.append(next(stream))
+    # force the drain-release plan pass with the final token in flight
+    eng.sched._drain_dispatched()
+    assert a not in eng.active and a not in eng.queue
+    assert eng.sched._inflight_total > 0
+    out = eng.cancel(a.rid)
+    assert out is not None and out.finished
+    assert a.state is RequestState.CANCELLED
+    remaining = list(stream)
+    assert not any(o.rid == a.rid for o in remaining)  # no late events
+    assert len(a.tokens) == 3  # the in-flight final token was discarded
+    assert not eng.sched._retiring and _drained(eng)

@@ -119,8 +119,20 @@ def test_allocator_release_while_shared_keeps_pages_live():
     m2 = kv.match_prefix(prompt[:8] + [1, 2, 3])
     assert m2.matched == 8 and tuple(m2.shared) == tuple(shared)
     kv.release(1)
-    assert kv.free_pages == kv.n_pages - 1
-    assert kv.match_prefix(prompt + [77]).matched == 0  # registry swept
+    assert kv.free_pages == kv.n_pages - 1  # retained pages ARE reclaimable
+    # prefix RETENTION: the drained registry stays matchable (LRU pool)
+    assert kv.retained_pages == 3
+    m3 = kv.match_prefix(prompt + [77])
+    assert m3.matched == 10 and tuple(m3.shared) == tuple(shared)
+    # ... unless retention is disabled: then the registry is swept
+    kv2 = PagedKVCache(n_pages=9, page_size=4, max_batch=3,
+                       max_pages_per_seq=4, retain_prefixes=False)
+    kv2.reserve(0, len(prompt))
+    kv2.register_prefix(0, prompt)
+    kv2.commit_prefixes()
+    kv2.release(0)
+    assert kv2.retained_pages == 0
+    assert kv2.match_prefix(prompt + [77]).matched == 0  # registry swept
 
 
 def test_allocator_churn_with_sharing_conserves_pages():
@@ -167,6 +179,67 @@ def test_allocator_churn_with_sharing_conserves_pages():
     for s in list(prompts):
         kv.release(s)
     assert kv.free_pages == total
+
+
+def test_retention_lru_evicts_oldest_under_pressure():
+    """Refcount-0 registered pages are retained (matchable) and evicted
+    LRU-first when the free list runs dry; unregistered pages are never
+    retained."""
+    kv = PagedKVCache(n_pages=6, page_size=4, max_batch=2,
+                      max_pages_per_seq=4)  # 5 usable
+    prompt = list(range(8))  # exactly 2 pages
+    kv.reserve(0, 8)
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    kv.release(0)
+    assert kv.retained_pages == 2
+    assert kv.free_pages == 5  # retained pages count as reclaimable
+    assert kv.match_prefix(prompt + [9]).matched == 8  # both pages shared
+    # allocating 4 pages: 3 off the free list + 1 LRU eviction (the chain
+    # HEAD was released first, so it evicts first and breaks the match)
+    kv.reserve(1, 16)
+    assert kv.retained_pages == 1
+    assert kv.match_prefix(prompt + [9]).matched == 0
+    kv.release(1)
+    assert kv.free_pages == 5  # conservation across retention churn
+
+
+def test_prefix_retention_reuses_drained_prefix():
+    """ISSUE 4 satellite regression: a DRAINED engine still serves its
+    registered system prompt — a resubmitted shared-prefix request
+    revives the retained pages (zero new prefix-page allocations) and
+    decodes exactly as a fresh engine would (dense: exact)."""
+    cfg = _cfg_for("dense")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    system = list(range(40, 60))  # 20 tokens: 2 full pages + 4-row tail
+    sp = SamplingParams(max_new=4)
+
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8)
+    eng.submit(Request(prompt=system + [1, 2], sampling=sp, rid=0))
+    eng.run()
+    assert not eng.has_work
+    # drained: 2 full prefix pages + the registered tail page retained
+    assert eng.kv.retained_pages == 3
+    retained = list(eng.kv._retained)
+
+    b = Request(prompt=system + [9, 9], sampling=sp, rid=1)
+    eng.submit(b)
+    adm = eng.schedule()
+    assert adm[0].matched == 20  # full pages + the 4 registered tail rows
+    owned = eng.kv.owned(adm[0].slot)
+    assert owned[:2] == retained[:2]  # revived, NOT newly allocated
+    assert adm[0].forks[0][0] == retained[2]  # boundary page COW-forks
+    eng.prefill(adm)
+    eng.run()
+    assert len(b.tokens) == 4
+
+    # the retention-served generation matches a cold engine exactly
+    ctrl = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8)
+    cb = Request(prompt=system + [9, 9], sampling=sp, rid=1)
+    ctrl.submit(cb)
+    ctrl.run()
+    assert b.tokens == cb.tokens
 
 
 def test_allocator_reserve_is_idempotent_and_bounded():

@@ -115,7 +115,7 @@ def test_serving_engine_continuous_batching_consistency():
 
 @pytest.mark.slow
 def test_serving_engine_camformer_mode():
-    cfg = smoke_config("codeqwen1.5-7b").replace(attn_mode="camformer")
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend="camformer")
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64)
