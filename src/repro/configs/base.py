@@ -42,6 +42,13 @@ class ModelConfig:
     group_size: int = 16
     stage1_k: int = 2
     use_kernel: bool = False
+    # Paged decode realization (serving): "fused" runs each backend's
+    # Pallas paged flash/CAM decode kernel (page table as scalar-prefetch
+    # operand, streaming softmax — decode bytes/token proportional to
+    # LIVE pages); "gather" keeps the XLA page-gather + masked attend as
+    # the selectable reference every kernel claim is pinned against.
+    # Prefill chunks (Sq > 1) always take the gather path.
+    paged_impl: str = "fused"
     # Distributed CAM search: shard_map the decode-time association stage
     # over the seq-sharded cache — local two-stage top-k per shard, then a
     # tiny candidate all-gather (k values/shard, not N scores) + global
@@ -92,6 +99,11 @@ class ModelConfig:
         if self.layer_backends is not None and not self.layer_backends:
             raise ValueError("layer_backends must be a non-empty tuple or "
                              "None (= uniform attn_backend)")
+        if self.paged_impl not in ("fused", "gather"):
+            raise ValueError(
+                f"paged_impl={self.paged_impl!r} must be 'fused' (Pallas "
+                "paged decode kernels) or 'gather' (XLA page-gather "
+                "reference)")
         if self.attn_mode is not None:
             raise ValueError(
                 f"attn_mode={self.attn_mode!r} was removed (deprecated in "

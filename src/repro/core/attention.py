@@ -35,8 +35,9 @@ from repro.core.binarize import binarize_qk
 from repro.core.topk import NEG_INF, two_stage_topk, single_stage_topk
 
 __all__ = [
-    "AttentionSpec", "attention", "camformer_paged_attention",
-    "dense_reference", "make_mask", "topk_softmax_weights",
+    "AttentionSpec", "attention", "binary_paged_attention",
+    "camformer_paged_attention", "dense_reference", "make_mask",
+    "topk_softmax_weights",
 ]
 
 
@@ -229,6 +230,86 @@ def attention(
     return out.reshape(b, h, sq, dv).astype(q.dtype)
 
 
+def binary_paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    k_scale: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    q_positions: jax.Array,
+    spec: AttentionSpec = AttentionSpec(mode="binary"),
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    impl: str = "fused",
+) -> jax.Array:
+    """Binary (HAD sign-match, FULL softmax) attention against the paged
+    dense-storage K/V pools — the single-stage ablation point on the
+    serving path.
+
+    Scoring binarizes Q and the paged keys at attend time
+    (``core/binarize.sign_pm1``); the softmax temperature is
+    ``q_scale * k_scale`` with ``k_scale`` the slot's RUNNING per-head
+    key scale maintained at page-write time (the camformer bookkeeping,
+    shared via ``BinaryBackend.page_spec``) — a streamable per-slot
+    statistic, unlike recomputing a mean over gathered rows, so the
+    fused and gather realizations score identically and trash-page
+    garbage never leaks into the temperature.
+
+    Decode rows (Sq == 1, ``impl="fused"``) run the paged flash-decode
+    kernel (kernels/paged_flash_decode.py) with in-register K
+    binarization — bytes/token proportional to live pages.  Prefill
+    chunks (Sq > 1) and ``impl="gather"`` gather the pages into logical
+    order and run the same masked full softmax in XLA (the reference).
+
+    Shapes as ``camformer_paged_attention`` but with dense
+    ``k_pages`` (P, H_kv, page, D).  Returns (B, H, Sq, Dv).
+    """
+    from repro.core.binarize import sign_pm1
+
+    b, h, sq, d = q.shape
+    _, hkv, page, dv = v_pages.shape
+    g = h // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kv_len = kv_len.reshape(b).astype(jnp.int32)
+    q_scale = jnp.mean(jnp.abs(q.astype(jnp.float32)), axis=-1)  # (B,H,Sq)
+    temp = (q_scale.reshape(b, hkv, g * sq)
+            * k_scale.astype(jnp.float32)[:, :, None])  # (B,Hkv,G*Sq)
+
+    if sq == 1 and impl == "fused":
+        from repro.kernels import ops as kops  # local import: no cycle
+
+        return kops.paged_flash_decode(
+            q, k_pages, v_pages, page_table, kv_len,
+            q_positions.reshape(b).astype(jnp.int32),
+            temp=temp, binary=True, window=window, scale=scale)
+
+    # Gather reference: logical-order pages, same scoring arithmetic.
+    from repro.kernels.ref import paged_gather_ref
+
+    ck = paged_gather_ref(k_pages, page_table)  # (B, H_kv, S_log, D)
+    cv = paged_gather_ref(v_pages, page_table)
+    s_log = ck.shape[2]
+    qb = sign_pm1(q.astype(jnp.float32)).reshape(b, hkv, g * sq, d)
+    kb = sign_pm1(ck.astype(jnp.float32))
+    scores = jnp.einsum("bhrd,bhkd->bhrk", qb, kb)
+    kpos = jnp.arange(s_log, dtype=jnp.int32)[None, None, None]
+    qpos = jnp.broadcast_to(q_positions[:, None, :], (b, hkv, sq))
+    qpos = jnp.broadcast_to(qpos[:, :, None, :], (b, hkv, g, sq)).reshape(
+        b, hkv, g * sq)[..., None]
+    ok = (kpos < kv_len.reshape(b, 1, 1, 1)) & (kpos <= qpos)
+    if window is not None:
+        ok = ok & (kpos > qpos - window)
+    logits = scores * temp[..., None] * scale
+    logits = jnp.where(ok, logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    w = jnp.where(ok, w, 0.0)  # inert rows: all-zero weights, zero out
+    out = jnp.einsum("bhrk,bhkd->bhrd", w, cv.astype(jnp.float32))
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
+
+
 def camformer_paged_attention(
     q: jax.Array,
     kp_pages: jax.Array,
@@ -241,6 +322,7 @@ def camformer_paged_attention(
     *,
     window: int | None = None,
     scale: float | None = None,
+    impl: str = "fused",
 ) -> jax.Array:
     """CAMformer attention against a paged, bit-packed KV cache.
 
@@ -250,12 +332,14 @@ def camformer_paged_attention(
     rows straight out of the paged pool — no per-slot contiguous ``max_len``
     key/value buffer is ever materialized.
 
-    Decode rows (Sq == 1) run the fused Pallas paged kernel
-    (kernels/bacam_decode.py): scoring + stage-1 top-k happen page-local
-    via scalar-prefetched page-table DMA and only stage-1 candidates reach
-    this level.  Prefill chunks (Sq > 1) gather the packed keys — 1
-    bit/element, 6.25% of bf16 — into logical order and run the same
-    two-stage selection in XLA.
+    Decode rows (Sq == 1, ``impl="fused"`` — the default) run the fused
+    Pallas paged kernel (kernels/bacam_decode.py): scoring + stage-1
+    top-k happen page-local via scalar-prefetched page-table DMA and
+    only stage-1 candidates reach this level.  Prefill chunks (Sq > 1)
+    and ``impl="gather"`` (the selectable XLA reference,
+    ``ModelConfig.paged_impl``) gather the packed keys — 1 bit/element,
+    6.25% of bf16 — into logical order and run the same two-stage
+    selection in XLA.
 
     Args:
       q: (B, H, Sq, D) queries (GQA: H = G * H_kv).
@@ -282,7 +366,7 @@ def camformer_paged_attention(
     qp = bacam.pack_bits(qb).reshape(b, hkv, g * sq, d // 32)
     kv_len = kv_len.reshape(b).astype(jnp.int32)
 
-    if sq == 1:
+    if sq == 1 and impl == "fused":
         # Decode fast path: fused paged scoring + stage-1 top-k kernel.
         from repro.kernels import ops as kops  # local import: no cycle
 

@@ -18,10 +18,23 @@ Concrete backends (registered at import, mirroring ``models/registry.py``):
   * ``dense``     — standard softmax attention; bf16 K/V caches & pages.
   * ``binary``    — HAD-binarized scoring, full softmax; dense storage
                     (keys are binarized at attend time, the ablation
-                    ladder's single-stage upper bound).
+                    ladder's single-stage upper bound).  Paged pools add
+                    a running per-slot ``k_scale`` so the HAD softmax
+                    temperature streams (no gathered-key recompute).
   * ``camformer`` — the paper: bit-packed binary Key SRAM (6.25% of bf16),
                     two-stage top-k CAM search, sparse top-k V gather;
                     fused Pallas kernels on the decode hot paths.
+
+Every backend's ``paged_decode`` has TWO selectable realizations
+(``ModelConfig.paged_impl``): ``"fused"`` (default) runs the decode row
+through a Pallas paged kernel — the flash-decode skeleton
+(kernels/paged_flash_decode.py) for dense/binary, the CAM search kernel
+(kernels/bacam_decode.py) for camformer — walking the slot's page list
+via scalar-prefetched page-table rows with a streaming softmax, so
+decode reads are proportional to LIVE pages; ``"gather"`` keeps the XLA
+page-gather + masked attend as the reference oracle every kernel claim
+is pinned against (``kernels/ref.paged_gather_ref``).  Prefill chunks
+(Sq > 1) always take the gather path.
 
 Per-layer policy lives on ``ModelConfig`` (``attn_backend`` +
 ``layer_backends``; ``cfg.backend_for(layer)`` resolves a name) so hybrid
@@ -58,6 +71,7 @@ import jax.numpy as jnp
 
 from repro.core import bacam
 from repro.core.attention import (AttentionSpec, attention,
+                                  binary_paged_attention,
                                   camformer_paged_attention,
                                   topk_softmax_weights)
 from repro.core.binarize import sign_pm1
@@ -117,6 +131,33 @@ def _seq_insert(buf, upd, index):
 
 
 _TRASH_PAGE = 0  # serving/kv_cache.py contract: physical page 0 is trash
+
+
+def _running_k_scale(k_scale, k, pos, kv_len, base):
+    """Update a slot's running per-head key scale over VALID tokens only.
+
+    k_scale: (B, H_kv) stored running mean of mean_d(|k|); k: (B, H_kv,
+    S, D) the freshly written keys; pos: (B, S) their logical positions;
+    kv_len: (B,) valid tokens INCLUDING this write; base: (B,) or None —
+    the prefix-sharing offset below which positions live in ANOTHER
+    slot's shared pages (they never counted toward this slot's mean).
+    Rows with no valid tokens (kv_len == 0 inert rows, fully-padded
+    chunks) leave the stored scale untouched — the fused-step contract.
+    """
+    b = k.shape[0]
+    valid = (pos < kv_len[:, None]).astype(jnp.float32)  # (B, S)
+    mean_d = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)  # (B,Hkv,S)
+    new_sum = jnp.einsum("bhs,bs->bh", mean_d, valid)
+    cnt = jnp.sum(valid, axis=-1)  # (B,)
+    if base is None:
+        base = jnp.zeros((b,), jnp.int32)
+    prior = jnp.clip(jnp.minimum(pos[:, 0], kv_len)
+                     - base.reshape(b).astype(jnp.int32),
+                     0, None).astype(jnp.float32)
+    total = prior + cnt
+    ks = ((k_scale * prior[:, None] + new_sum)
+          / jnp.maximum(total, 1.0)[:, None])
+    return jnp.where((total > 0)[:, None], ks, k_scale)
 
 
 def _page_phys_rows(page_table, positions, page: int, kv_len=None):
@@ -216,6 +257,30 @@ class AttentionBackend:
         """
         raise NotImplementedError
 
+    # -- analytic decode-step I/O accounting ----------------------------
+    def paged_io_stats(self, cfg, dtype, *, kv_len: int, page_size: int,
+                       n_table_pages: int) -> dict:
+        """Analytic per-layer, per-slot decode-step I/O in bytes.
+
+        ``fused_read_bytes``/``gather_read_bytes``: KV pool bytes READ
+        per decode token by each ``paged_impl`` realization (fused walks
+        only the slot's LIVE pages; gather dereferences the full
+        ``n_table_pages`` table extent).  ``gather_scratch_bytes``: the
+        peak logical-order scratch the gather impl materializes per slot
+        (the fused kernels stream page tiles — zero scratch).  Benchmarks
+        multiply by ``n_layers`` / batch for the system-level numbers.
+        """
+        hkv, d = cfg.n_kv_heads, cfg.head_dim
+        item = jnp.dtype(dtype).itemsize
+        row = 2 * hkv * d * item  # one K row + one V row, all kv heads
+        live_rows = -(-max(kv_len, 1) // page_size) * page_size
+        table_rows = n_table_pages * page_size
+        return {
+            "fused_read_bytes": live_rows * row,
+            "gather_read_bytes": table_rows * row,
+            "gather_scratch_bytes": table_rows * row,
+        }
+
     # -- contiguous-cache write (shared ring-buffer clamp) --------------
     def write_cache(self, cache, k, v, index, cfg):
         """Insert new K/V at `index` (traced) along the cache seq axis.
@@ -297,37 +362,89 @@ class DenseBackend(AttentionBackend):
 
     def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
                      cfg, *, base=None):
-        from repro.kernels.ref import paged_gather_ref
-
         # dense pages carry no per-slot running statistics: `base` only
         # affects which positions are freshly written, which the page
         # table already encodes
         new_cache = self._paged_write(cache, k, v, positions, page_table,
                                       kv_len)
-        # Gather the slot's pages into logical order and run the standard
-        # masked attend — logical position p is row p of the gather, so the
+        out = self._paged_attend(q, new_cache, positions, page_table,
+                                 kv_len, cfg)
+        return out, new_cache
+
+    def _paged_attend(self, q, cache, positions, page_table, kv_len, cfg):
+        if q.shape[2] == 1 and cfg.paged_impl == "fused":
+            # Fused paged flash-decode (kernels/paged_flash_decode.py):
+            # page-table walk with an online softmax — decode bytes
+            # proportional to live pages, no logical-order gather.
+            from repro.kernels import ops as kops
+
+            return kops.paged_flash_decode(
+                q, cache["k_pages"], cache["v_pages"], page_table,
+                kv_len.reshape(-1), positions[:, 0], window=cfg.window)
+        from repro.kernels.ref import paged_gather_ref
+
+        # Reference impl (and every prefill chunk): gather the slot's
+        # pages into logical order and run the standard masked attend —
+        # logical position p is row p of the gather, so the
         # contiguous-cache masking applies verbatim.
-        ck = paged_gather_ref(new_cache["k_pages"], page_table)
-        cv = paged_gather_ref(new_cache["v_pages"], page_table)
+        ck = paged_gather_ref(cache["k_pages"], page_table)
+        cv = paged_gather_ref(cache["v_pages"], page_table)
         kv_pos = jnp.arange(ck.shape[2], dtype=jnp.int32)[None]
         kv_valid = kv_pos < kv_len.reshape(-1, 1)
-        out = attention(
+        return attention(
             q, ck, cv, self.spec(cfg), causal=True,
             q_positions=positions, kv_positions=kv_pos,
             kv_valid=kv_valid, window=cfg.window)
-        return out, new_cache
 
 
 class BinaryBackend(DenseBackend):
     """HAD-binarized scoring with a FULL softmax (no top-k sparsity).
 
-    Storage is identical to dense (keys binarize at attend time); only the
-    scoring arithmetic changes — the single-stage upper bound of the
-    Tables III/IV ablation ladder.
+    Contiguous storage is identical to dense (keys binarize at attend
+    time); only the scoring arithmetic changes — the single-stage upper
+    bound of the Tables III/IV ablation ladder.
+
+    The PAGED pools additionally carry camformer's running per-slot
+    ``k_scale`` (HAD softmax-temperature bookkeeping, maintained at
+    page-write time over valid tokens only), which makes the paged path
+    genuinely binarized: before, ``paged_decode`` inherited the dense
+    gather + full-precision softmax wholesale, so the "binary" serving
+    lane measured gather cost rather than sign-match scoring — and a
+    streaming kernel could not reproduce the old temperature anyway
+    (a mean over ALL gathered rows, trash-page garbage included).
     """
 
     name = "binary"
     mode = "binary"
+
+    def page_spec(self, cfg, n_pages, page_size, max_batch, dtype):
+        spec = super().page_spec(cfg, n_pages, page_size, max_batch, dtype)
+        spec["k_scale"] = (
+            jax.ShapeDtypeStruct((max_batch, cfg.n_kv_heads), jnp.float32),
+            ("batch", "kv_heads"))
+        return spec
+
+    def _paged_write(self, cache, k, v, positions, page_table, kv_len=None,
+                     base=None):
+        pages = super()._paged_write(cache, k, v, positions, page_table,
+                                     kv_len)
+        b = k.shape[0]
+        pos = positions.astype(jnp.int32)
+        kvl = (jnp.full((b,), pos.shape[1], jnp.int32) if kv_len is None
+               else kv_len.reshape(b).astype(jnp.int32))
+        pages["k_scale"] = _running_k_scale(
+            cache["k_scale"], k, pos, kvl, base)
+        return pages
+
+    def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
+                     cfg, *, base=None):
+        new_cache = self._paged_write(cache, k, v, positions, page_table,
+                                      kv_len, base=base)
+        out = binary_paged_attention(
+            q, new_cache["k_pages"], new_cache["v_pages"],
+            new_cache["k_scale"], page_table, kv_len, positions,
+            self.spec(cfg), window=cfg.window, impl=cfg.paged_impl)
+        return out, new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -409,8 +526,25 @@ class CamformerBackend(AttentionBackend):
         out = camformer_paged_attention(
             q, new_cache["kp_pages"], new_cache["v_pages"],
             new_cache["k_scale"], page_table, kv_len, positions,
-            self.spec(cfg), window=cfg.window)
+            self.spec(cfg), window=cfg.window, impl=cfg.paged_impl)
         return out, new_cache
+
+    def paged_io_stats(self, cfg, dtype, *, kv_len, page_size,
+                       n_table_pages):
+        hkv, d = cfg.n_kv_heads, cfg.head_dim
+        item = jnp.dtype(dtype).itemsize
+        kp_row = hkv * (d // 8)  # bit-packed keys: 1 bit/element
+        live_rows = -(-max(kv_len, 1) // page_size) * page_size
+        table_rows = n_table_pages * page_size
+        # V is never gathered: only the k_top survivors are read, per
+        # GQA query row (worst case all-unique selections).
+        g = cfg.n_heads // hkv
+        v_sel = hkv * g * min(cfg.k_top, kv_len or 1) * d * item
+        return {
+            "fused_read_bytes": live_rows * kp_row + v_sel,
+            "gather_read_bytes": table_rows * kp_row + v_sel,
+            "gather_scratch_bytes": table_rows * kp_row,
+        }
 
     # -- internals ------------------------------------------------------
     def _paged_write(self, cache, k, v, positions, page_table, kv_len, cfg,
@@ -443,20 +577,7 @@ class CamformerBackend(AttentionBackend):
         new_v = cache["v_pages"].at[phys, :, row].set(
             v.astype(cache["v_pages"].dtype).transpose(0, 2, 1, 3))
 
-        # Running per-slot/head key scale over VALID tokens only.
-        valid = (pos < kv_len[:, None]).astype(jnp.float32)  # (B, S)
-        mean_d = jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)  # (B,Hkv,S)
-        new_sum = jnp.einsum("bhs,bs->bh", mean_d, valid)
-        cnt = jnp.sum(valid, axis=-1)  # (B,)
-        if base is None:
-            base = jnp.zeros((b,), jnp.int32)
-        prior = jnp.clip(jnp.minimum(pos[:, 0], kv_len)
-                         - base.reshape(b).astype(jnp.int32),
-                         0, None).astype(jnp.float32)
-        total = prior + cnt
-        ks = ((cache["k_scale"] * prior[:, None] + new_sum)
-              / jnp.maximum(total, 1.0)[:, None])
-        ks = jnp.where((total > 0)[:, None], ks, cache["k_scale"])
+        ks = _running_k_scale(cache["k_scale"], k, pos, kv_len, base)
         return {"kp_pages": new_kp, "v_pages": new_v, "k_scale": ks}
 
     def _cache_attend(self, q, cache, kv_len, positions, cfg,

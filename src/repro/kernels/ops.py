@@ -17,6 +17,7 @@ from repro.kernels import bacam_mvm as _mvm
 from repro.kernels import bacam_topk as _btk
 from repro.kernels import bitslice_vmm as _bsv
 from repro.kernels import flash_attention as _fla
+from repro.kernels import paged_flash_decode as _pfd
 from repro.kernels.ref import MASKED_SCORE
 
 __all__ = [
@@ -26,6 +27,7 @@ __all__ = [
     "bacam_attention_scores_topk_packed",
     "bacam_paged_scores_topk",
     "flash_attention",
+    "paged_flash_decode",
     "bitslice_vmm",
     "MASKED_SCORE",
 ]
@@ -167,6 +169,59 @@ def bacam_paged_scores_topk(
     fvals = jnp.where(vals <= MASKED_SCORE // 2, NEG_INF,
                       vals.astype(jnp.float32))
     return fvals, jnp.clip(idx, 0, np_ * page - 1)
+
+
+def paged_flash_decode(q, k_pages, v_pages, page_table, kv_len, q_pos, *,
+                       temp=None, scale=None, binary=False, window=None,
+                       interpret=None):
+    """Fused paged flash-decode (kernels/paged_flash_decode.py): decode
+    attention through the page table with an online softmax — no
+    logical-order gather, no (B, H_kv, NP*page, D) scratch.
+
+    q: (B, H, 1, D) decode queries (GQA: H = G * H_kv);
+    k_pages/v_pages: (P, H_kv, page, D[v]) one layer's pools;
+    page_table: (B, NP) int32; kv_len: (B,) int32; q_pos: (B,) int32.
+    temp: (B, H_kv, G) per-row softmax temperature (binary HAD scoring);
+    binary: score on sign(q)/sign(k) instead of q·k.
+
+    Dispatch: the compiled Mosaic kernel on TPU; off-TPU the pure-jnp
+    streaming walk (ref.paged_flash_decode_ref — same page sweep and
+    accumulation order, XLA-compiled) rather than the Pallas
+    interpreter, whose per-grid-cell overhead would misrepresent the
+    algorithm.  Pass interpret=True to force the Pallas interpreter
+    anyway (CPU CI debugging escape hatch).
+
+    Returns (B, H, 1, Dv) in q's dtype; kv_len == 0 rows are zeros.
+    """
+    from repro.kernels.ref import paged_flash_decode_ref
+
+    b, h, sq, d = q.shape
+    assert sq == 1, "paged_flash_decode is the decode (Sq == 1) hot path"
+    hkv = k_pages.shape[1]
+    g = h // hkv
+    dv = v_pages.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qr = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    if binary:
+        qr = jnp.where(qr > 0, 1.0, -1.0)
+    # The temperature is per query row: fold it (and the score scale)
+    # into the query operand so the stream needs no post-hoc rescale.
+    qr = qr * jnp.float32(scale)
+    if temp is not None:
+        qr = qr * temp.reshape(b, hkv, g, 1).astype(jnp.float32)
+    if interpret is not None or not INTERPRET:
+        # explicit interpret=True/False forces the Pallas kernel in that
+        # mode; interpret=None on TPU runs it compiled
+        out = _pfd.paged_flash_decode(
+            qr, k_pages, v_pages, page_table, kv_len.reshape(b),
+            q_pos.reshape(b), binary=binary, window=window,
+            interpret=bool(interpret) if interpret is not None else False)
+    else:
+        out = paged_flash_decode_ref(  # off-TPU default: the jnp walk
+            qr, k_pages, v_pages, page_table, kv_len.reshape(b),
+            q_pos.reshape(b), binary=binary, window=window)
+    return out.reshape(b, h, 1, dv).astype(q.dtype)
 
 
 def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None, scale=None,

@@ -1,0 +1,193 @@
+"""Pallas TPU kernel: fused paged flash-decode for dense & binary scoring.
+
+The digital-contextualization half of the serving stack: decode-time
+softmax attention against the engine's *paged* KV pools
+(serving/kv_cache.py) without ever gathering a slot's pages into logical
+order.  The page table is a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``) — exactly the structure of the CAM
+decode kernel (bacam_decode.py) — so the grid walks *logical* pages and
+the BlockSpec index_map dereferences ``page_table[b, j]`` to DMA the
+right physical K/V page.  Per (slot, kv-head, logical page) grid cell
+the kernel fuses:
+
+  * a per-page score tile (R, page) — R = GQA group rows per kv head
+    at ONE decode position — via one MXU dot; the (R, S_log) score
+    matrix never exists in HBM;
+  * masking from the slot's kv length / query position (+ window);
+  * an online (streaming) softmax: running max / denominator / output
+    accumulator live in VMEM scratch across the page sweep (the
+    canonical flash pattern of kernels/flash_attention.py), so there is
+    no logical-order K/V gather and no (B, H_kv, NP*page, D) scratch.
+
+ONE kernel skeleton serves both registered softmax realizations
+(core/backend.py):
+
+  * ``dense``  — bf16/f32 q·k scores (queries arrive pre-scaled by
+    1/sqrt(d));
+  * ``binary`` — HAD sign-match scoring (``binary=True``): the K tile is
+    binarized in-register with ``core/binarize.sign_pm1`` semantics
+    (x > 0 -> +1 else -1) and queries arrive as ±1 rows pre-scaled by
+    the HAD softmax temperature (q_scale * running k_scale * 1/sqrt(d)),
+    which is per-row and therefore folds into the query operand — the
+    stream never needs a post-hoc rescale.
+
+Rows with ``kv_len == 0`` are the fused-step contract's INERT rows:
+every score masks away, the denominator stays zero, and the output is
+a defined all-zeros vector that the engine never reads.  Inactive
+page-table entries point at the reserved trash page 0; kv_len masking
+keeps its garbage out of every live row's softmax.
+
+Interpret-mode escape hatch: pass ``interpret=True`` (the ops wrapper
+does this automatically off-TPU) to run the kernel through the Pallas
+interpreter for CPU CI debugging — same semantics, XLA-compiled grid.
+
+VMEM per cell (defaults page=64, D<=256, R<=8): k/v tiles
+2*64*256*4 B = 128 KiB + q/acc ~ 2*8*256*4 B ~ 16 KiB  =>  resident.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.topk import NEG_INF
+
+
+def _kernel(
+    pt_ref,
+    kvlen_ref,
+    qpos_ref,
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_scr,
+    l_scr,
+    acc_scr,
+    *,
+    page: int,
+    binary: bool,
+    window: int | None,
+):
+    b = pl.program_id(0)
+    j = pl.program_id(2)  # logical page index
+    nj = pl.num_programs(2)
+    rows = q_ref.shape[2]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # --- per-page score tile (R, page): one MXU dot, never in HBM ---
+    q = q_ref[0, 0].astype(jnp.float32)  # (R, D) pre-scaled rows
+    k = k_ref[0, 0].astype(jnp.float32)  # (page, D) physical page tile
+    if binary:
+        k = jnp.where(k > 0, 1.0, -1.0)  # sign_pm1 semantics in-register
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+
+    # --- masking: validity (kv length) + causality from the slot's
+    # decode position (decode rows share one qpos per slot) ---
+    kvl = kvlen_ref[b]
+    qpos = qpos_ref[b]
+    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
+    ok = jnp.logical_and(kpos < kvl, kpos <= qpos)
+    if window is not None:
+        ok = jnp.logical_and(ok, kpos > qpos - window)
+    s = jnp.where(ok, s, NEG_INF)
+
+    # --- online softmax update (flash_attention.py pattern) ---
+    m_prev = m_scr[:, 0]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(ok, p, 0.0)  # fully-masked (inert) rows stay all-zero
+    l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_scr[:, 0] = m_new
+
+    @pl.when(j == nj - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[:, 0], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("binary", "window", "interpret"))
+def paged_flash_decode(
+    q_rows: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    q_pos: jax.Array,
+    *,
+    binary: bool = False,
+    window: int | None = None,
+    interpret: bool = True,
+):
+    """Fused paged flash-decode over one layer's K/V page pools.
+
+    Args:
+      q_rows: (B, H_kv, R, D) float32 — R = GQA-group query rows per kv
+        head, all at one position per slot, PRE-SCALED: dense rows carry
+        q * 1/sqrt(d); binary rows carry sign(q) * temp * 1/sqrt(d)
+        (the HAD temperature is per-row, so it folds into the operand).
+      k_pages: (P, H_kv, page, D) key pool (one layer; bf16/f32).
+      v_pages: (P, H_kv, page, Dv) value pool.
+      page_table: (B, NP) int32 logical->physical page map; unallocated
+        entries must hold a valid (trash) page index.
+      kv_len: (B,) int32 valid tokens per slot (0 = inert row).
+      q_pos: (B,) int32 decode position per slot (causal/window anchor).
+      binary: binarize the K tile in-register (HAD sign-match scoring).
+      interpret: run via the Pallas interpreter (CPU CI escape hatch).
+
+    Returns:
+      (B, H_kv, R, Dv) float32 attention outputs; inert rows are zeros.
+    """
+    b, hkv, rows, d = q_rows.shape
+    n_pages, _, page, dv = v_pages.shape
+    np_ = page_table.shape[1]
+    assert k_pages.shape[:3] == (n_pages, hkv, page), (
+        k_pages.shape, v_pages.shape)
+    grid = (b, hkv, np_)
+    kern = functools.partial(
+        _kernel, page=page, binary=binary, window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # page_table, kv_len, q_pos
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, rows, d),
+                         lambda b_, h, j, pt, kvl, qp: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d),
+                         lambda b_, h, j, pt, kvl, qp: (pt[b_, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, dv),
+                         lambda b_, h, j, pt, kvl, qp: (pt[b_, j], h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, rows, dv),
+                         lambda b_, h, j, pt, kvl, qp: (b_, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((rows, 1), jnp.float32),   # running max
+            pltpu.VMEM((rows, 1), jnp.float32),   # running denominator
+            pltpu.VMEM((rows, dv), jnp.float32),  # output accumulator
+        ],
+    )
+    (out,) = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((b, hkv, rows, dv), jnp.float32)],
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), kv_len.astype(jnp.int32),
+      q_pos.astype(jnp.int32), q_rows.astype(jnp.float32), k_pages, v_pages)
+    return out

@@ -82,6 +82,16 @@ def bacam_topk_stage1_ref(
 def paged_gather_ref(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     """Gather a paged pool into per-slot contiguous logical order.
 
+    THE test oracle for every paged-decode kernel in this package
+    (bacam_decode.py, paged_flash_decode.py) and the runtime
+    ``paged_impl="gather"`` reference realization: logical position p is
+    row p of the gather, so the contiguous-cache attend/masking
+    semantics apply verbatim to its output, and each fused kernel is
+    pinned token-for-token against an attend over this layout.  Note it
+    materializes the full (B, H_kv, NP * page_size, ...) table extent —
+    exactly the O(slots x max_len x d) scratch the fused kernels exist
+    to avoid.
+
     pages: (n_pages, H_kv, page_size, ...); page_table: (B, NP) int32.
     Returns (B, H_kv, NP * page_size, ...) — slot-major logical layout.
     """
@@ -89,6 +99,74 @@ def paged_gather_ref(pages: jax.Array, page_table: jax.Array) -> jax.Array:
     b, np_, hkv, page = g.shape[:4]
     g = jnp.moveaxis(g, 2, 1)  # (B, H_kv, NP, page, ...)
     return g.reshape(b, hkv, np_ * page, *g.shape[4:])
+
+
+def paged_flash_decode_ref(
+    q_rows: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    page_table: jax.Array,
+    kv_len: jax.Array,
+    q_pos: jax.Array,
+    *,
+    binary: bool = False,
+    window: int | None = None,
+) -> jax.Array:
+    """Pure-jnp oracle for kernels/paged_flash_decode.py — AND its
+    off-TPU realization (kernels/ops.py dispatches here when no TPU is
+    present, where the Pallas interpreter's per-grid-cell overhead would
+    misrepresent the streaming algorithm).
+
+    Walks the page list mirroring the kernel's grid sweep — one
+    (B, H_kv, page, D) tile per step, online-softmax running
+    max/denominator/accumulator, the kernel's exact accumulation order —
+    so, like the kernel and unlike ``paged_gather_ref``, it never
+    materializes the logical-order K/V scratch.  Short tables (serving
+    decode: a handful of pages) unroll the sweep so XLA fuses the steps;
+    long tables fall back to ``lax.scan``.  Shapes/semantics as the
+    kernel: q_rows (B, H_kv, R, D) PRE-SCALED rows, returns
+    (B, H_kv, R, Dv) float32, ``kv_len == 0`` rows are zeros.
+    """
+    from repro.core.topk import NEG_INF
+
+    b, hkv, rows, d = q_rows.shape
+    _, _, page, dv = v_pages.shape
+    np_ = page_table.shape[1]
+    q = q_rows.astype(jnp.float32)
+    kvl = kv_len.reshape(b, 1, 1, 1)
+    qp = q_pos.reshape(b, 1, 1, 1)
+
+    def step(carry, j):
+        m, l, acc = carry
+        phys = page_table[:, j]  # (B,)
+        k = k_pages[phys].astype(jnp.float32)  # (B, H_kv, page, D)
+        v = v_pages[phys].astype(jnp.float32)
+        if binary:
+            k = jnp.where(k > 0, 1.0, -1.0)  # sign_pm1 semantics
+        s = jnp.einsum("bhrd,bhpd->bhrp", q, k)
+        kpos = j * page + jnp.arange(page, dtype=jnp.int32)[None, None, None]
+        ok = (kpos < kvl) & (kpos <= qp)
+        if window is not None:
+            ok = ok & (kpos > qp - window)
+        s = jnp.where(ok, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhrp,bhpd->bhrd", p, v)
+        return (m_new, l, acc), None
+
+    carry = (jnp.full((b, hkv, rows), NEG_INF, jnp.float32),
+             jnp.zeros((b, hkv, rows), jnp.float32),
+             jnp.zeros((b, hkv, rows, dv), jnp.float32))
+    if np_ <= 32:  # unroll: fusable steps, no loop overhead
+        for j in range(np_):
+            carry, _ = step(carry, jnp.int32(j))
+    else:
+        carry, _ = jax.lax.scan(step, carry,
+                                jnp.arange(np_, dtype=jnp.int32))
+    m, l, acc = carry
+    return acc / jnp.maximum(l, 1e-30)[..., None]
 
 
 def bacam_paged_topk_ref(

@@ -57,6 +57,11 @@ def main():
                     help="continuous batching: prefill joining prompts in "
                          "chunks of this many tokens across ticks "
                          "(default: whole prompt in the admission tick)")
+    ap.add_argument("--paged-impl", default=None,
+                    choices=("fused", "gather"),
+                    help="paged decode realization: fused Pallas "
+                         "flash/CAM kernels (default) or the XLA "
+                         "page-gather reference")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress per-token output, print only summaries")
     args = ap.parse_args()
@@ -70,7 +75,8 @@ def main():
     eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, page_size=args.page_size,
                       n_pages=args.n_pages, mode=args.mode,
-                      prefill_slice=args.prefill_slice)
+                      prefill_slice=args.prefill_slice,
+                      paged_impl=args.paged_impl)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
     print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
           f"{eng.kv.page_size} tokens "

@@ -106,7 +106,15 @@ class ServeEngine:
                  max_len: int = 512, seed: int = 0,
                  page_size: int = 64, n_pages: Optional[int] = None,
                  prefix_sharing: bool = True, mode: str = "overlap",
-                 prefill_slice: Optional[int] = None):
+                 prefill_slice: Optional[int] = None,
+                 paged_impl: Optional[str] = None):
+        if paged_impl is not None:
+            # per-engine override of the decode realization: "fused"
+            # (Pallas paged flash/CAM kernels, the default) vs "gather"
+            # (the XLA page-gather reference) — rides on cfg so every
+            # layer's backend.paged_decode inside the fused device step
+            # sees it; ModelConfig validates the value
+            cfg = cfg.replace(paged_impl=paged_impl)
         if md.page_specs is None:
             raise ValueError(
                 f"{cfg.name!r} (family {cfg.family!r}) does not expose the "

@@ -1,0 +1,265 @@
+"""Fused paged flash-decode (kernels/paged_flash_decode.py) pinned
+against the page-gather oracle, kernel-level and through ServeEngine.
+
+Tolerance policy (same-path memory): ``paged_impl="fused"`` vs
+``paged_impl="gather"`` share the write path and differ only in the
+attend realization, whose dense/binary arithmetic is a softmax over
+identical logits — so engine comparisons are TOKEN-FOR-TOKEN exact and
+kernel comparisons are float-noise allclose.  The camformer/mixed legs
+are marked slow (fused CAM selection vs gathered two-stage top-k)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.attention import (AttentionSpec, attention,
+                                  binary_paged_attention)
+from repro.core.backend import get_backend
+from repro.kernels import ops as kops
+from repro.kernels import paged_flash_decode as pfd
+from repro.kernels import ref as kref
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import Request, RequestState, SamplingParams, ServeEngine
+
+_SLOW = pytest.mark.slow
+
+
+def _cfg(backend=None, layer_backends=None, **kw):
+    cfg = smoke_config("codeqwen1.5-7b")
+    if layer_backends:
+        kw["n_layers"] = max(cfg.n_layers, len(layer_backends))
+    return cfg.replace(attn_backend=backend, layer_backends=layer_backends,
+                       **kw)
+
+
+def _pools(key, b=3, hkv=2, d=32, page=8, np_=4, n_pages=10):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    k_pages = jax.random.normal(k1, (n_pages, hkv, page, d), jnp.float32)
+    v_pages = jax.random.normal(k2, (n_pages, hkv, page, d), jnp.float32)
+    # live entries point at arbitrary non-trash pages; unallocated
+    # entries at the reserved trash page 0 (whose pool rows hold noise)
+    pt = jax.random.randint(k3, (b, np_), 1, n_pages).astype(jnp.int32)
+    q = jax.random.normal(k4, (b, hkv * 2, 1, d), jnp.float32)
+    return q, k_pages, v_pages, pt
+
+
+def _gather_attend(q, k_pages, v_pages, pt, kv_len, q_pos, window=None):
+    """Dense oracle: logical-order gather + standard masked attend."""
+    ck = kref.paged_gather_ref(k_pages, pt)
+    cv = kref.paged_gather_ref(v_pages, pt)
+    kv_pos = jnp.arange(ck.shape[2], dtype=jnp.int32)[None]
+    return attention(
+        q, ck, cv, AttentionSpec(mode="dense"), causal=True,
+        q_positions=q_pos.reshape(-1, 1), kv_positions=kv_pos,
+        kv_valid=kv_pos < kv_len.reshape(-1, 1), window=window)
+
+
+# ---------------------------------------------------------------------------
+# kernel level: fused (jnp walk AND Pallas interpreter) == gather oracle
+
+
+@pytest.mark.parametrize("window", [None, 5])
+def test_dense_kernel_matches_gather_oracle_on_edges(window):
+    """kv_len exactly on a page boundary, mid-page, == 1, and == 0
+    (inert), with trash-paged unallocated table entries."""
+    page = 8
+    q, k_pages, v_pages, pt = _pools(jax.random.PRNGKey(0), page=page)
+    # slot 0: kv_len on the page boundary; slot 1: inert; slot 2: mid-page
+    kv_len = jnp.array([2 * page, 0, 21], jnp.int32)
+    q_pos = jnp.maximum(kv_len - 1, 0)
+    want = _gather_attend(q, k_pages, v_pages, pt, kv_len, q_pos,
+                          window=window)
+    got = kops.paged_flash_decode(q, k_pages, v_pages, pt, kv_len, q_pos,
+                                  window=window)
+    live = np.array([0, 2])
+    np.testing.assert_allclose(np.asarray(got)[live], np.asarray(want)[live],
+                               atol=1e-5)
+    # inert row: defined all-zeros output (the gather oracle's inert rows
+    # are unspecified — uniform softmax over garbage — so no comparison)
+    assert jnp.all(got[1] == 0.0)
+
+
+def test_interpret_escape_hatch_matches_walk_and_oracle():
+    """interpret=True (the Pallas-interpreter CPU debugging hatch) and
+    the off-TPU jnp walk share the page sweep and accumulation order."""
+    q, k_pages, v_pages, pt = _pools(jax.random.PRNGKey(1))
+    kv_len = jnp.array([8, 13, 0], jnp.int32)
+    q_pos = jnp.maximum(kv_len - 1, 0)
+    walk = kops.paged_flash_decode(q, k_pages, v_pages, pt, kv_len, q_pos)
+    kern = kops.paged_flash_decode(q, k_pages, v_pages, pt, kv_len, q_pos,
+                                   interpret=True)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(walk), atol=1e-6)
+    assert jnp.all(kern[2] == 0.0)  # inert contract holds in the kernel too
+    want = _gather_attend(q, k_pages, v_pages, pt, kv_len, q_pos)
+    np.testing.assert_allclose(np.asarray(kern)[:2], np.asarray(want)[:2],
+                               atol=1e-5)
+
+
+def test_binary_kernel_matches_gather_impl():
+    """HAD sign-match scoring: fused in-register K binarization + folded
+    temperature == gather impl (sign_pm1 over gathered keys, stored
+    k_scale temperature), via binary_paged_attention's two impls."""
+    q, k_pages, v_pages, pt = _pools(jax.random.PRNGKey(2))
+    b, hkv = pt.shape[0], k_pages.shape[1]
+    kv_len = jnp.array([16, 7, 0], jnp.int32)
+    q_pos = jnp.maximum(kv_len - 1, 0).reshape(b, 1)
+    k_scale = jax.random.uniform(jax.random.PRNGKey(3), (b, hkv)) + 0.5
+    outs = {
+        impl: binary_paged_attention(
+            q, k_pages, v_pages, k_scale, pt, kv_len, q_pos, impl=impl)
+        for impl in ("fused", "gather")
+    }
+    np.testing.assert_allclose(np.asarray(outs["fused"])[:2],
+                               np.asarray(outs["gather"])[:2], atol=1e-5)
+    # both impls satisfy the inert-row contract (all-zero output)
+    assert jnp.all(outs["fused"][2] == 0.0)
+    assert jnp.all(outs["gather"][2] == 0.0)
+
+
+@pytest.mark.parametrize("backend", ["dense", "binary"])
+def test_backend_paged_decode_impls_agree_and_share_writes(backend):
+    """backend.paged_decode under paged_impl fused vs gather: identical
+    pool writes (trash-page routing included) and allclose outputs."""
+    cfg = _cfg(backend)
+    bk = get_backend(backend)
+    b, page, np_, n_pages = 2, 8, 3, 8
+    hkv, d, h = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    spec = bk.page_spec(cfg, n_pages, page, b, jnp.float32)
+    pools = {n: jnp.zeros(sds.shape, sds.dtype)
+             for n, (sds, _) in spec.items()}
+    pt = jnp.array([[1, 2, 3], [4, 5, 0]], jnp.int32)
+    s = 4
+    key = jax.random.PRNGKey(4)
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (b, h, s, d), jnp.float32)
+    k = jax.random.normal(k2, (b, hkv, s, d), jnp.float32)
+    v = jax.random.normal(k3, (b, hkv, s, d), jnp.float32)
+    # slot 1's write is right-padded past kv_len: rows land on trash
+    pos = jnp.stack([jnp.arange(8, 8 + s), jnp.arange(3, 3 + s)])
+    kv_len = jnp.array([8 + s, 5], jnp.int32)
+
+    outs, caches = {}, {}
+    for impl in ("fused", "gather"):
+        ci = cfg.replace(paged_impl=impl)
+        # decode rows (Sq == 1) exercise the fused path; use the last row
+        o, c = bk.paged_decode(q[:, :, -1:], pools, k[:, :, -1:],
+                               v[:, :, -1:], pos[:, -1:], pt,
+                               kv_len, ci)
+        outs[impl], caches[impl] = o, c
+    np.testing.assert_allclose(np.asarray(outs["fused"]),
+                               np.asarray(outs["gather"]), atol=1e-5)
+    for name in caches["fused"]:
+        assert jnp.array_equal(caches["fused"][name],
+                               caches["gather"][name]), name
+
+
+def test_binary_kscale_updates_and_inert_rows_leave_it_untouched():
+    """The binary paged pools carry camformer's running k_scale: valid
+    writes update the per-slot mean; kv_len == 0 rows (the fused-step
+    inert contract) leave it untouched."""
+    cfg = _cfg("binary")
+    bk = get_backend("binary")
+    b, page, n_pages = 2, 8, 6
+    hkv, d = cfg.n_kv_heads, cfg.head_dim
+    spec = bk.page_spec(cfg, n_pages, page, b, jnp.float32)
+    assert "k_scale" in spec  # the layout addition this PR rides on
+    pools = {n: jnp.zeros(sds.shape, sds.dtype)
+             for n, (sds, _) in spec.items()}
+    prev = pools["k_scale"] + 3.25
+    pools["k_scale"] = prev
+    s = 4
+    k = jax.random.normal(jax.random.PRNGKey(5), (b, hkv, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(6), (b, hkv, s, d))
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    pt = jnp.array([[1, 2], [3, 4]], jnp.int32)
+    kv_len = jnp.array([s, 0], jnp.int32)  # slot 1 inert
+    new = bk._paged_write(pools, k, v, pos, pt, kv_len)
+    want0 = jnp.mean(jnp.abs(k[0]), axis=(1, 2))
+    np.testing.assert_allclose(np.asarray(new["k_scale"][0]),
+                               np.asarray(want0), atol=1e-6)
+    assert jnp.array_equal(new["k_scale"][1], prev[1])  # inert: untouched
+    # and the inert slot's K/V rows all routed to the trash page
+    assert jnp.all(new["k_pages"][pt[1]] == 0.0)
+    assert jnp.all(new["v_pages"][pt[1]] == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# engine level: fused == gather token-for-token through ServeEngine
+
+
+def _run_engine(cfg, impl, prompts, *, mode="sync", max_new=5, **kw):
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    eng = ServeEngine(md, cfg, params, mode=mode, paged_impl=impl, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(prompt=list(p),
+                           sampling=SamplingParams(max_new=max_new), rid=i))
+    done = {r.rid: r.tokens for r in eng.run()}
+    assert eng.kv.free_pages == eng.kv.n_pages - 1  # drained clean
+    return done
+
+
+@pytest.mark.parametrize("backend", ["dense", "binary"])
+def test_engine_fused_matches_gather_with_cow_sharing(backend):
+    """Token-for-token through the full engine, with a shared prefix
+    whose length (12, page_size 8) forces a COW boundary-page fork and
+    nonzero sharer offsets — the fork `base` threads through both
+    impls identically."""
+    cfg = _cfg(backend)
+    shared = list(range(30, 42))  # 12 tokens: fork mid-page 2
+    prompts = [shared + [i, i + 2] for i in (3, 7)] + [[9, 1, 4], [2, 2]]
+    got = {impl: _run_engine(cfg, impl, prompts)
+           for impl in ("fused", "gather")}
+    assert got["fused"] == got["gather"]
+    assert set(got["fused"]) == set(range(len(prompts)))
+
+
+@pytest.mark.parametrize("mode", [
+    "sync", pytest.param("overlap", marks=_SLOW)])
+@pytest.mark.parametrize("layer_backends", [
+    pytest.param(("dense", "camformer"), marks=_SLOW)])
+def test_engine_fused_matches_gather_mixed_stack(mode, layer_backends):
+    """A mixed ("dense", "camformer") stack: dense layers flip between
+    flash-decode and gather, camformer layers between the CAM kernel and
+    the gathered two-stage top-k — token-for-token in both loop modes
+    (same-path comparison: only paged_impl differs)."""
+    cfg = _cfg(layer_backends=layer_backends)
+    shared = list(range(30, 42))
+    prompts = [shared + [i, i + 2] for i in (3, 7)] + [[9, 1, 4]]
+    got = {impl: _run_engine(cfg, impl, prompts, mode=mode,
+                             prefill_slice=8)
+           for impl in ("fused", "gather")}
+    assert got["fused"] == got["gather"]
+
+
+def test_engine_fused_matches_gather_under_preemption():
+    """Page-pressure preemption (tiny pool): the preempt/resume path and
+    its trash-page bookkeeping behave identically under both impls."""
+    cfg = _cfg("dense")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+
+    def gen(impl):
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                          page_size=8, n_pages=5, prefix_sharing=False,
+                          mode="sync", paged_impl=impl)
+        lo = Request(prompt=[1, 2, 3, 4, 5, 6],
+                     sampling=SamplingParams(max_new=18), rid=0, priority=0)
+        eng.submit(lo)
+        eng.step()
+        eng.step()
+        assert lo.state is RequestState.DECODING
+        hi = Request(prompt=[9, 8, 7, 6, 5, 4],
+                     sampling=SamplingParams(max_new=18), rid=1, priority=5)
+        eng.submit(hi)
+        done = eng.run()  # hi preempts lo, lo resumes via recompute
+        assert {r.rid for r in done} == {0, 1}
+        return {r.rid: r.tokens for r in done}
+
+    assert gen("fused") == gen("gather")
