@@ -33,7 +33,6 @@ Standalone:
 """
 
 import argparse
-import json
 import time
 
 import jax
@@ -305,8 +304,11 @@ def main():
     run([], max_batch=args.max_batch, max_new=max_new, backends=backends,
         payload=payload)  # the one shared reporting path
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump(payload, f, indent=2, default=float)
+        from repro.utils import write_json_atomic
+
+        # atomic (write-temp + rename): a timed-out CI lane can never
+        # upload a truncated BENCH_*.json artifact
+        write_json_atomic(args.json, payload)
         print(f"wrote {args.json}")
     if args.smoke:
         for b, r in payload["backends"].items():

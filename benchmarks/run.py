@@ -12,7 +12,8 @@ sweeps.  ``--backend`` narrows the paged-decode sweep to one backend.
 """
 
 import argparse
-import json
+
+from repro.utils import write_json_atomic
 
 
 def main() -> None:
@@ -44,9 +45,11 @@ def main() -> None:
     for name, val, derived in csv_rows:
         print(f"{name},{val},{derived}")
     if args.json:
-        with open(args.json, "w") as f:
-            json.dump([{"name": n, "us_per_call": v, "derived": d}
-                       for n, v, d in csv_rows], f, indent=2, default=float)
+        # atomic (write-temp + rename): a timed-out CI lane can never
+        # upload a truncated BENCH_*.json artifact
+        write_json_atomic(args.json,
+                          [{"name": n, "us_per_call": v, "derived": d}
+                           for n, v, d in csv_rows])
         print(f"wrote {args.json} ({len(csv_rows)} rows)")
 
 

@@ -1,0 +1,457 @@
+"""Traffic-SLO load benchmark: Poisson arrivals against the serving stack.
+
+Turns "overlap >= sync ticks/s" into the metric that matters under live
+traffic: TTFT (submit -> first token) and TPOT (inter-token) percentiles,
+and goodput-under-SLO — completed requests per second whose TTFT *and*
+mean TPOT met the SLO — under continuous-batching admission, preemption,
+and COW prefix sharing (a configurable fraction of requests opens with a
+shared system prompt).
+
+Three drivers, one report:
+
+  * ``--inproc``   — submit straight onto the ``EngineRunner`` thread (no
+    sockets): the deterministic CI lane.
+  * ``--url URL``  — drive an already-running gateway over HTTP/SSE.
+  * (default)      — self-host a gateway on a free port and drive it over
+    real HTTP/SSE.
+
+``--smoke`` shrinks the workload to CI size and asserts the report is
+well-formed, goodput > 0, and p99 TTFT is bounded (post-warmup; the jit
+compile is excluded).  ``--json`` writes the report atomically
+(write-temp + rename) so a timed-out CI lane never uploads a truncated
+``BENCH_slo_*.json`` artifact.
+
+Standalone:
+
+    PYTHONPATH=src:. python benchmarks/serve_slo.py --smoke --inproc \\
+        --backend camformer --json BENCH_slo_camformer.json
+"""
+
+import argparse
+import asyncio
+import json
+import threading
+import time
+from urllib.parse import urlparse
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import Request, SamplingParams, ServeEngine
+from repro.serving.gateway import EngineRunner, serve_background
+from repro.utils import write_json_atomic
+
+# short / medium / long prompt-length mix: (lo, hi, weight), lengths are
+# TAIL tokens appended after the (optional) shared system prompt
+PROMPT_MIX = ((2, 8, 0.6), (8, 24, 0.3), (24, 48, 0.1))
+
+REQUIRED_KEYS = (
+    "backend",
+    "driver",
+    "n_requests",
+    "completed",
+    "cancelled",
+    "wall_s",
+    "throughput_rps",
+    "tokens_per_s",
+    "ttft_ms",
+    "tpot_ms",
+    "slo",
+    "slo_attained_frac",
+    "goodput_rps",
+    "preemptions",
+    "prefix_hit_rate",
+    "engine",
+)
+
+
+def build_engine(args) -> ServeEngine:
+    cfg = smoke_config(args.arch).replace(attn_backend=args.backend)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    return ServeEngine(
+        md,
+        cfg,
+        params,
+        max_batch=args.max_batch,
+        max_len=args.max_len,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
+        mode=args.mode,
+        prefill_slice=args.page_size,  # one fixed-size prefill chunk/jit
+    )
+
+
+def _shared_prompt(args):
+    return [7 + (i % 50) for i in range(args.shared_len)]
+
+
+def build_workload(args, vocab: int):
+    """Poisson arrivals over the prompt-length mix; ``--shared-frac`` of
+    requests open with a common system prompt (COW prefix-sharing hits)."""
+    rng = np.random.default_rng(args.seed)
+    shared = _shared_prompt(args)
+    lows = np.array([m[0] for m in PROMPT_MIX])
+    highs = np.array([m[1] for m in PROMPT_MIX])
+    weights = np.array([m[2] for m in PROMPT_MIX], dtype=float)
+    weights /= weights.sum()
+    t = 0.0
+    work = []
+    for _ in range(args.requests):
+        t += float(rng.exponential(1.0 / args.rate))
+        band = int(rng.choice(len(PROMPT_MIX), p=weights))
+        tail_len = int(rng.integers(lows[band], highs[band] + 1))
+        tail = [int(x) for x in rng.integers(1, vocab, size=tail_len)]
+        prompt = tail
+        if rng.random() < args.shared_frac:
+            prompt = shared + tail
+        # clamp so prompt+max_new always fits max_len (admissible by
+        # construction: the benchmark measures latency, not rejections)
+        prompt = prompt[: max(1, args.max_len - args.max_new)]
+        work.append({"arrival_s": t, "prompt": prompt, "max_new": args.max_new})
+    return work
+
+
+def _sampling(args) -> SamplingParams:
+    return SamplingParams(temperature=args.temperature, top_k=8, max_new=args.max_new)
+
+
+def _warmup(engine, args):
+    """Compile every jit the measured run will hit — the prefill chunk,
+    both decode variants, and the COW boundary fork (two requests sharing
+    a system prompt) — so TTFT measures serving, not compilation."""
+    shared = _shared_prompt(args)
+    for tail in ([3, 5], [8, 1]):
+        engine.submit(Request(prompt=shared + tail, sampling=_sampling(args)))
+    engine.run()
+
+
+# ---------------------------------------------------------------------------
+# drivers: each returns (records, wall_s, server_view)
+# records: [{"arrival": t, "times": [t_tok, ...], "finish": reason}]
+# server_view: {"preemptions", "prefix_hit_rate", "engine": {...}}
+# ---------------------------------------------------------------------------
+
+
+def _server_view(engine, metrics) -> dict:
+    return {
+        "preemptions": engine.preemptions,
+        "prefix_hit_rate": metrics.snapshot()["requests"]["prefix_hit_rate"],
+        "engine": {
+            "ticks": engine.ticks,
+            "readbacks": engine.readbacks,
+            "blocked_s": engine.blocked_s,
+            "peak_pages": engine.peak_pages,
+            "pool_pages": engine.kv.n_pages - 1,
+        },
+    }
+
+
+def drive_inproc(args, workload):
+    engine = build_engine(args)
+    _warmup(engine, args)
+    runner = EngineRunner(engine, idle_wait_s=0.002)
+    runner.start()
+    records = []
+    t0 = time.perf_counter()
+    for w in workload:
+        wait = t0 + w["arrival_s"] - time.perf_counter()
+        if wait > 0:
+            time.sleep(wait)
+        rec = {"arrival": time.perf_counter(), "times": [], "finish": None}
+        done = threading.Event()
+
+        def sink(out, rec=rec, done=done):
+            if out.token is not None:
+                rec["times"].append(time.perf_counter())
+            if out.finished:
+                rec["finish"] = out.finish_reason
+                done.set()
+
+        runner.submit(
+            Request(prompt=list(w["prompt"]), sampling=_sampling(args)), sink
+        )
+        records.append((rec, done))
+    for _, done in records:
+        done.wait(timeout=600)
+    wall = time.perf_counter() - t0
+    view = _server_view(engine, runner.metrics)
+    runner.stop()
+    return [rec for rec, _ in records], wall, view
+
+
+async def _sse_generate(host, port, spec):
+    """One HTTP/SSE generation; returns the per-token wall-clock record."""
+    reader, writer = await asyncio.open_connection(host, port)
+    body = json.dumps(spec).encode()
+    writer.write(
+        b"POST /v1/generate HTTP/1.1\r\n"
+        + f"Host: {host}:{port}\r\n".encode()
+        + f"Content-Length: {len(body)}\r\n".encode()
+        + b"Content-Type: application/json\r\n\r\n"
+        + body
+    )
+    await writer.drain()
+    rec = {"arrival": time.perf_counter(), "times": [], "finish": None}
+    try:
+        await reader.readuntil(b"\r\n\r\n")
+        while True:
+            line = await reader.readline()
+            if not line:
+                break
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            evt = json.loads(line[6:])
+            if evt.get("token") is not None:
+                rec["times"].append(time.perf_counter())
+            if evt.get("finished"):
+                rec["finish"] = evt.get("finish_reason")
+                break
+    finally:
+        writer.close()
+        try:
+            await writer.wait_closed()
+        except (ConnectionResetError, BrokenPipeError):
+            pass
+    return rec
+
+
+async def _fetch_json(host, port, path):
+    reader, writer = await asyncio.open_connection(host, port)
+    writer.write(
+        f"GET {path} HTTP/1.1\r\nHost: {host}:{port}\r\n\r\n".encode()
+    )
+    await writer.drain()
+    head = await reader.readuntil(b"\r\n\r\n")
+    length = 0
+    for raw in head.decode("latin-1").split("\r\n"):
+        name, sep, value = raw.partition(":")
+        if sep and name.strip().lower() == "content-length":
+            length = int(value.strip())
+    body = await reader.readexactly(length)
+    writer.close()
+    return json.loads(body)
+
+
+async def _drive_url(args, workload, host, port):
+    spec_base = {
+        "temperature": args.temperature,
+        "top_k": 8,
+        "max_new": args.max_new,
+    }
+    # warmup request outside the clock (jit compiles on first traffic)
+    await _sse_generate(host, port, dict(spec_base, prompt=[3, 5, 8, 1]))
+
+    t0 = time.perf_counter()
+
+    async def one(w):
+        await asyncio.sleep(max(0.0, t0 + w["arrival_s"] - time.perf_counter()))
+        return await _sse_generate(host, port, dict(spec_base, prompt=w["prompt"]))
+
+    records = await asyncio.gather(*(one(w) for w in workload))
+    wall = time.perf_counter() - t0
+    metrics = await _fetch_json(host, port, "/metrics")
+    view = {
+        "preemptions": metrics["engine"]["preemptions"],
+        "prefix_hit_rate": metrics["requests"]["prefix_hit_rate"],
+        "engine": {
+            k: metrics["engine"].get(k)
+            for k in ("ticks", "readbacks", "blocked_s", "peak_pages", "pool_pages")
+        },
+    }
+    return list(records), wall, view
+
+
+def drive_gateway(args, workload):
+    if args.url:
+        u = urlparse(args.url)
+        return asyncio.run(_drive_url(args, workload, u.hostname, u.port))
+    engine = build_engine(args)
+    _warmup(engine, args)
+    handle = serve_background(engine)
+    try:
+        return asyncio.run(
+            _drive_url(args, workload, handle.gateway.host, handle.port)
+        )
+    finally:
+        handle.stop()
+
+
+# ---------------------------------------------------------------------------
+# the report
+# ---------------------------------------------------------------------------
+
+
+def _pcts(samples):
+    if not samples:
+        return {"p50": 0.0, "p99": 0.0, "mean": 0.0, "n": 0}
+    arr = np.asarray(samples)
+    return {
+        "p50": float(np.percentile(arr, 50)),
+        "p99": float(np.percentile(arr, 99)),
+        "mean": float(arr.mean()),
+        "n": len(samples),
+    }
+
+
+def build_report(args, records, wall, view, driver):
+    ttfts, tpots, per_req_ok, tokens = [], [], [], 0
+    completed = cancelled = 0
+    for rec in records:
+        if rec["finish"] in ("cancelled", "rejected", None):
+            cancelled += 1
+            continue
+        completed += 1
+        tokens += len(rec["times"])
+        if not rec["times"]:
+            continue
+        ttft = (rec["times"][0] - rec["arrival"]) * 1e3
+        gaps = [
+            (b - a) * 1e3 for a, b in zip(rec["times"], rec["times"][1:])
+        ]
+        tpot = float(np.mean(gaps)) if gaps else 0.0
+        ttfts.append(ttft)
+        if gaps:
+            tpots.append(tpot)
+        per_req_ok.append(
+            ttft <= args.slo_ttft_ms and (not gaps or tpot <= args.slo_tpot_ms)
+        )
+    attained = sum(per_req_ok)
+    return {
+        "bench": "serve_slo",
+        "backend": args.backend,
+        "driver": driver,
+        "engine_mode": args.mode,
+        "n_requests": len(records),
+        "rate_rps": args.rate,
+        "shared_frac": args.shared_frac,
+        "shared_len": args.shared_len,
+        "max_new": args.max_new,
+        "seed": args.seed,
+        "completed": completed,
+        "cancelled": cancelled,
+        "wall_s": wall,
+        "throughput_rps": completed / max(wall, 1e-9),
+        "tokens_per_s": tokens / max(wall, 1e-9),
+        "ttft_ms": _pcts(ttfts),
+        "tpot_ms": _pcts(tpots),
+        "slo": {"ttft_ms": args.slo_ttft_ms, "tpot_ms": args.slo_tpot_ms},
+        "slo_attained": attained,
+        "slo_attained_frac": attained / max(completed, 1),
+        "goodput_rps": attained / max(wall, 1e-9),
+        "preemptions": view["preemptions"],
+        "prefix_hit_rate": view["prefix_hit_rate"],
+        "engine": view["engine"],
+    }
+
+
+def print_report(r):
+    print(
+        f"\n== serve_slo [{r['backend']}] {r['driver']} driver: "
+        f"{r['n_requests']} reqs @ {r['rate_rps']:.1f} rps "
+        f"(shared-prefix frac {r['shared_frac']:.0%}) =="
+    )
+    t, p = r["ttft_ms"], r["tpot_ms"]
+    print(
+        f"  TTFT p50 {t['p50']:.1f} ms | p99 {t['p99']:.1f} ms    "
+        f"TPOT p50 {p['p50']:.1f} ms | p99 {p['p99']:.1f} ms"
+    )
+    print(
+        f"  completed {r['completed']}/{r['n_requests']} in {r['wall_s']:.2f}s "
+        f"({r['throughput_rps']:.2f} rps, {r['tokens_per_s']:.1f} tok/s)"
+    )
+    print(
+        f"  goodput under SLO (ttft<={r['slo']['ttft_ms']:.0f}ms, "
+        f"tpot<={r['slo']['tpot_ms']:.0f}ms): {r['goodput_rps']:.2f} rps "
+        f"({r['slo_attained_frac']:.0%} of completions)"
+    )
+    print(
+        f"  preemptions {r['preemptions']}, prefix hit rate "
+        f"{r['prefix_hit_rate']:.0%}, peak pages "
+        f"{r['engine']['peak_pages']}/{r['engine']['pool_pages']}, "
+        f"{r['engine']['ticks']} ticks / {r['engine']['readbacks']} readbacks"
+    )
+
+
+def check_report(r, *, smoke_ttft_bound_ms):
+    """--smoke gate: well-formed report, nonzero goodput, bounded p99 TTFT."""
+    missing = [k for k in REQUIRED_KEYS if k not in r]
+    assert not missing, f"SLO report missing keys: {missing}"
+    assert r["completed"] > 0, "no request completed"
+    assert r["cancelled"] == 0, f"{r['cancelled']} requests failed"
+    assert r["goodput_rps"] > 0, (
+        f"zero goodput: every completion violated the smoke SLO "
+        f"(ttft p99 {r['ttft_ms']['p99']:.0f} ms, "
+        f"tpot p99 {r['tpot_ms']['p99']:.0f} ms)"
+    )
+    assert r["ttft_ms"]["p99"] <= smoke_ttft_bound_ms, (
+        f"p99 TTFT {r['ttft_ms']['p99']:.0f} ms exceeds the smoke bound "
+        f"{smoke_ttft_bound_ms:.0f} ms"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="codeqwen1.5-7b")
+    ap.add_argument("--backend", default="dense")
+    ap.add_argument("--inproc", action="store_true", help="no sockets: CI lane")
+    ap.add_argument("--url", default=None, help="drive a running gateway")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=4.0, help="arrival rate (rps)")
+    ap.add_argument("--shared-frac", type=float, default=0.5)
+    ap.add_argument("--shared-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=96)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--mode", default="overlap", choices=("overlap", "sync"))
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--slo-ttft-ms", type=float, default=2500.0)
+    ap.add_argument("--slo-tpot-ms", type=float, default=1000.0)
+    ap.add_argument(
+        "--smoke",
+        action="store_true",
+        help="CI-sized run + report-shape/goodput/TTFT-bound assertions",
+    )
+    ap.add_argument(
+        "--smoke-ttft-bound-ms",
+        type=float,
+        default=30000.0,
+        help="p99 TTFT ceiling asserted under --smoke (post-warmup)",
+    )
+    ap.add_argument("--json", default=None, help="atomic report path")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.max_new = min(args.max_new, 4)
+        # generous SLO: CPU CI measures the machinery, not the hardware
+        args.slo_ttft_ms = max(args.slo_ttft_ms, 20000.0)
+        args.slo_tpot_ms = max(args.slo_tpot_ms, 20000.0)
+
+    cfg = smoke_config(args.arch)
+    workload = build_workload(args, cfg.vocab)
+    if args.inproc:
+        records, wall, view = drive_inproc(args, workload)
+        driver = "inproc"
+    else:
+        records, wall, view = drive_gateway(args, workload)
+        driver = "gateway" if not args.url else "url"
+    report = build_report(args, records, wall, view, driver)
+    print_report(report)
+    if args.json:
+        write_json_atomic(args.json, report)
+        print(f"wrote {args.json}")
+    if args.smoke:
+        check_report(report, smoke_ttft_bound_ms=args.smoke_ttft_bound_ms)
+        print("smoke gate: OK")
+
+
+if __name__ == "__main__":
+    main()

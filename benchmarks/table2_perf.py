@@ -11,7 +11,6 @@ CAMformer's sparsity delivers independent of the analog hardware.
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import AttentionSpec, attention
 from repro.core.energy import area_mm2, attention_query_cost, table2_rows

@@ -24,7 +24,6 @@ from repro.core import (hoeffding_drop_bound, single_stage_topk, topk_recall,
                         two_stage_topk)
 from repro.launch.mesh import make_mesh_for
 from repro.models import get_model_def
-from repro.models.module import init_params
 from repro.train.data import SyntheticLMData
 from repro.train.trainer import Trainer, TrainerConfig
 

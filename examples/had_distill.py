@@ -10,7 +10,6 @@ student from single-stage to the paper's two-stage top-k costs ~nothing
 """
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import smoke_config
 from repro.configs.base import SHAPES

@@ -14,7 +14,7 @@ import argparse
 
 import jax
 
-from repro.configs.base import ModelConfig, SHAPES, register
+from repro.configs.base import ModelConfig, SHAPES
 from repro.launch.mesh import make_mesh_for
 from repro.models import get_model_def
 from repro.train.data import SyntheticLMData

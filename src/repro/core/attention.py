@@ -32,7 +32,7 @@ import jax.numpy as jnp
 
 from repro.core import bacam
 from repro.core.binarize import binarize_qk
-from repro.core.topk import NEG_INF, two_stage_topk, single_stage_topk
+from repro.core.topk import NEG_INF, two_stage_topk
 
 __all__ = [
     "AttentionSpec", "attention", "binary_paged_attention",

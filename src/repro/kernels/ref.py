@@ -137,7 +137,7 @@ def paged_flash_decode_ref(
     qp = q_pos.reshape(b, 1, 1, 1)
 
     def step(carry, j):
-        m, l, acc = carry
+        m, denom, acc = carry
         phys = page_table[:, j]  # (B,)
         k = k_pages[phys].astype(jnp.float32)  # (B, H_kv, page, D)
         v = v_pages[phys].astype(jnp.float32)
@@ -152,9 +152,9 @@ def paged_flash_decode_ref(
         m_new = jnp.maximum(m, s.max(axis=-1))
         alpha = jnp.exp(m - m_new)
         p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
-        l = l * alpha + p.sum(axis=-1)
+        denom = denom * alpha + p.sum(axis=-1)
         acc = acc * alpha[..., None] + jnp.einsum("bhrp,bhpd->bhrd", p, v)
-        return (m_new, l, acc), None
+        return (m_new, denom, acc), None
 
     carry = (jnp.full((b, hkv, rows), NEG_INF, jnp.float32),
              jnp.zeros((b, hkv, rows), jnp.float32),
@@ -165,8 +165,8 @@ def paged_flash_decode_ref(
     else:
         carry, _ = jax.lax.scan(step, carry,
                                 jnp.arange(np_, dtype=jnp.int32))
-    m, l, acc = carry
-    return acc / jnp.maximum(l, 1e-30)[..., None]
+    m, denom, acc = carry
+    return acc / jnp.maximum(denom, 1e-30)[..., None]
 
 
 def bacam_paged_topk_ref(

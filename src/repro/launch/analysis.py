@@ -15,7 +15,6 @@ D = global tokens), 2*N*D for inference passes.
 
 from __future__ import annotations
 
-import math
 
 from repro.configs.base import SHAPES
 

@@ -1,0 +1,104 @@
+"""Gateway launcher: serve a model over HTTP/SSE.
+
+    PYTHONPATH=src python -m repro.launch.gateway --arch camformer-bert \\
+        --smoke [--backend camformer] [--host 127.0.0.1 --port 8000] \\
+        [--max-batch 8 --max-len 256] [--mode overlap|sync] \\
+        [--prefill-slice 64] [--paged-impl fused|gather]
+
+Then point traffic at it:
+
+    curl -N -X POST http://127.0.0.1:8000/v1/generate \\
+        -d '{"prompt": [3, 5, 8, 1], "max_new": 16, "temperature": 0.8}'
+    curl http://127.0.0.1:8000/healthz
+    curl http://127.0.0.1:8000/metrics
+
+Each generated token streams back as a server-sent event; closing the
+connection mid-stream cancels the request and frees its pages.  See
+``benchmarks/serve_slo.py`` for the Poisson load generator that drives
+this endpoint (or the engine in-process) and reports TTFT/TPOT
+percentiles and goodput-under-SLO.
+"""
+
+import argparse
+import asyncio
+
+import jax
+
+from repro.configs import get_config, smoke_config
+from repro.launch.cli import add_backend_args, apply_backend_args
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import ServeEngine
+from repro.serving.gateway import Gateway
+
+
+def build_engine(args) -> ServeEngine:
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    cfg = apply_backend_args(cfg, args)
+    if args.prefill_chunk is not None:
+        cfg = cfg.replace(prefill_chunk=args.prefill_chunk)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    return ServeEngine(
+        md,
+        cfg,
+        params,
+        max_batch=args.max_batch,
+        max_len=args.max_len,
+        page_size=args.page_size,
+        n_pages=args.n_pages,
+        mode=args.mode,
+        prefill_slice=args.prefill_slice,
+        paged_impl=args.paged_impl,
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    add_backend_args(ap)
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8000, help="0 = pick a free port")
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--page-size", type=int, default=64)
+    ap.add_argument("--n-pages", type=int, default=None)
+    ap.add_argument("--prefill-chunk", type=int, default=None)
+    ap.add_argument("--mode", default="overlap", choices=("overlap", "sync"))
+    ap.add_argument(
+        "--prefill-slice",
+        type=int,
+        default=None,
+        help="continuous batching: prefill joining prompts in chunks of "
+        "this many tokens across ticks",
+    )
+    ap.add_argument("--paged-impl", default=None, choices=("fused", "gather"))
+    args = ap.parse_args()
+
+    engine = build_engine(args)
+    layout = engine.cfg.uniform_backend or ",".join(engine.cfg.layer_backends)
+
+    async def serve() -> None:
+        gw = Gateway(engine, host=args.host, port=args.port)
+        await gw.start()
+        print(
+            f"gateway [{layout}] listening on http://{args.host}:{gw.port} "
+            f"(pool {engine.kv.n_pages - 1} pages x {engine.kv.page_size} "
+            f"tokens, {args.mode} loop)"
+        )
+        try:
+            await gw.serve_forever()
+        except asyncio.CancelledError:
+            pass
+        finally:
+            await gw.aclose()
+
+    try:
+        asyncio.run(serve())
+    except KeyboardInterrupt:
+        print("gateway stopped")
+
+
+if __name__ == "__main__":
+    main()

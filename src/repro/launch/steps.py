@@ -68,9 +68,9 @@ def make_train_step(md, cfg, *, peak_lr=3e-4, warmup=2000, total_steps=100_000,
         else:  # microbatched gradient accumulation
             def micro(carry, mb):
                 gsum, lsum = carry
-                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                (mb_loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
                     state["params"], mb)
-                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+                return (jax.tree.map(jnp.add, gsum, g), lsum + mb_loss), None
 
             zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
                                  state["params"])

@@ -156,8 +156,8 @@ def chunked_cross_entropy(
     def body(carry, inputs):
         tot, ce_tot, cnt = carry
         xc, yc, mc = inputs
-        l, (ce, n) = chunk_loss(xc, yc, mc)
-        return (tot + l, ce_tot + ce, cnt + n), None
+        cl, (ce, n) = chunk_loss(xc, yc, mc)
+        return (tot + cl, ce_tot + ce, cnt + n), None
 
     xs = (
         x[:, : n_chunks * chunk].reshape(b, n_chunks, chunk, d).swapaxes(0, 1),
@@ -166,7 +166,7 @@ def chunked_cross_entropy(
     )
     (tot, ce_tot, cnt), _ = jax.lax.scan(body, (0.0, 0.0, 0.0), xs)
     if rem:
-        l, (ce, n) = chunk_loss(x[:, -rem:], labels[:, -rem:], loss_mask[:, -rem:])
-        tot, ce_tot, cnt = tot + l, ce_tot + ce, cnt + n
+        cl, (ce, n) = chunk_loss(x[:, -rem:], labels[:, -rem:], loss_mask[:, -rem:])
+        tot, ce_tot, cnt = tot + cl, ce_tot + ce, cnt + n
     cnt = jnp.maximum(cnt, 1.0)
     return tot / cnt, {"ce": ce_tot / cnt, "tokens": cnt}

@@ -8,8 +8,6 @@ CAMformer attention over the mixed sequence) is the real system under test.
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 
 from repro.models import layers as L
 from repro.models import transformer as T

@@ -159,6 +159,10 @@ class ServeEngine:
         self._tok_buf = jnp.zeros((max_batch,), jnp.int32)
         self._zero_tok = jnp.zeros((max_batch,), jnp.int32)
 
+        # overlap-mode dispatch-ahead state: the tick whose tokens have
+        # been dispatched but not read yet (None in sync mode / idle)
+        self._pending: Optional[_InFlight] = None
+
         # instrumentation (benchmarks / the single-readback invariant)
         self.readbacks = 0  # device->host transfers (token id arrays)
         self.blocked_s = 0.0  # host time spent blocked on readbacks
@@ -197,6 +201,17 @@ class ServeEngine:
     @property
     def has_work(self) -> bool:
         return self.sched.has_work
+
+    @property
+    def has_pending(self) -> bool:
+        """True while a dispatched-ahead tick's tokens are still unread
+        (``mode="overlap"``); a driver loop must keep polling until both
+        ``has_work`` and ``has_pending`` clear."""
+        return self._pending is not None
+
+    @property
+    def preemptions(self) -> int:
+        return self.sched.preemptions
 
     # ------------------------------------------------------------------
     # the fused device step (everything per tick inside one jit)
@@ -337,6 +352,30 @@ class ServeEngine:
             events.extend(self._collect(self._dispatch(plan)))
         return events
 
+    def poll(self) -> List[RequestOutput]:
+        """ONE engine iteration honoring ``mode``; the unit external
+        drivers (``stream()``, the network gateway's pump thread, the
+        traffic-SLO load benchmark) build their loops from.  Safe to call
+        when idle (returns ``[]``); new submissions between polls join
+        the next tick — continuous-batching admission under live traffic.
+
+        ``mode="sync"``: plan + dispatch + read one tick.
+        ``mode="overlap"``: dispatch tick ``t+1`` BEFORE reading tick
+        ``t`` — the device starts on the next forward while the host
+        ingests tokens, detects finishes, and plans (the overlap the
+        paper's pipelined search/contextualization story calls for).
+        The returned outputs are therefore those of the PREVIOUS poll's
+        tick; keep polling until ``has_pending`` clears to drain."""
+        if self.mode == "sync":
+            return self.step() if self.has_work else []
+        inflight = (self._dispatch(self.sched.plan_tick())
+                    if self.has_work else None)
+        events = ([] if self._pending is None
+                  else self._collect(self._pending))
+        self._pending = (None if inflight is None or inflight.empty
+                         else inflight)
+        return events
+
     def stream(self, *requests: Request) -> Iterator[RequestOutput]:
         """Submit `requests` (if given) and drive the engine, yielding
         each generated token as a RequestOutput until the pool drains.
@@ -345,20 +384,8 @@ class ServeEngine:
         per-request tick schedule."""
         for r in requests:
             self.submit(r)
-        if self.mode == "sync":
-            while self.has_work:
-                yield from self.step()
-            return
-        pending: Optional[_InFlight] = None
-        while self.has_work or pending is not None:
-            # dispatch tick t+1 BEFORE reading tick t: the device starts
-            # on the next forward while the host ingests tokens, detects
-            # finishes, and plans — the overlap the paper's pipelined
-            # search/contextualization story calls for.
-            inflight = self._dispatch(self.sched.plan_tick())
-            if pending is not None:
-                yield from self._collect(pending)
-            pending = None if inflight.empty else inflight
+        while self.has_work or self.has_pending:
+            yield from self.poll()
 
     def run(self) -> List[Request]:
         """Drain the engine; returns completed requests in finish order."""

@@ -71,12 +71,12 @@ def sample(logits: jax.Array, rng: jax.Array, *, temperature: float = 1.0,
     """Single-policy sampling (python scalars). logits: (B, V)."""
     if temperature <= 0.0:
         return greedy(logits)
-    l = logits / temperature
+    z = logits / temperature
     if top_k:
-        l = apply_top_k(l, top_k)
+        z = apply_top_k(z, top_k)
     if top_p < 1.0:
-        l = apply_top_p(l, top_p)
-    return jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+        z = apply_top_p(z, top_p)
+    return jax.random.categorical(rng, z, axis=-1).astype(jnp.int32)
 
 
 def sample_step(logits: jax.Array, rng: jax.Array, temperature, top_k,
@@ -91,8 +91,8 @@ def sample_step(logits: jax.Array, rng: jax.Array, temperature, top_k,
     g = greedy(logits)
     t = jnp.asarray(temperature, jnp.float32)
     safe_t = jnp.where(t > 0, t, 1.0)[:, None]
-    l = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
-    c = jax.random.categorical(rng, l, axis=-1).astype(jnp.int32)
+    z = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
+    c = jax.random.categorical(rng, z, axis=-1).astype(jnp.int32)
     return jnp.where(t > 0, c, g)
 
 
@@ -119,10 +119,10 @@ def sample_step_keyed(logits, keys, index, temperature, top_k, top_p):
     g = greedy(logits)
     t = jnp.asarray(temperature, jnp.float32)
     safe_t = jnp.where(t > 0, t, 1.0)[:, None]
-    l = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
+    z = apply_top_p(apply_top_k(logits / safe_t, top_k), top_p)
 
     def draw(key, i, row):
         return jax.random.categorical(jax.random.fold_in(key, i), row)
 
-    c = jax.vmap(draw)(keys, index.astype(jnp.int32), l).astype(jnp.int32)
+    c = jax.vmap(draw)(keys, index.astype(jnp.int32), z).astype(jnp.int32)
     return jnp.where(t > 0, c, g)

@@ -144,6 +144,8 @@ class Scheduler:
         self.active: List[Optional[Request]] = [None] * max_batch
         self.done: List[Request] = []
         self.peak_pages = 0  # high-water mark of actively-owned pages
+        self.preemptions = 0  # page-pressure evictions (gateway /metrics
+        #                       and the traffic-SLO benchmark report this)
 
         b = max_batch
         self.pos = np.zeros(b, np.int32)  # next decode position per slot
@@ -266,6 +268,7 @@ class Scheduler:
         self.active[slot] = None
         req.state = RequestState.QUEUED  # tokens kept: resume re-prefills
         self.queue.append(req)  # _seq unchanged: keeps its FIFO standing
+        self.preemptions += 1
 
     def admit(self) -> List[Admission]:
         """Fill free slots from the queue, matching shared prefixes and

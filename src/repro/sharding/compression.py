@@ -13,7 +13,6 @@ A standalone reference (`compressed_mean_ref`) backs the property tests.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

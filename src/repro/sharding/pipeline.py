@@ -14,7 +14,6 @@ validated against the sequential oracle in tests/test_pipeline.py on a
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

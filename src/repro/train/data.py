@@ -22,7 +22,6 @@ import queue
 import threading
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 

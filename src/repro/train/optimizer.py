@@ -10,7 +10,6 @@ their parameters), which launch/steps.py exploits for the dry-run.
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple
 
 import jax

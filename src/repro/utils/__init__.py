@@ -1,1 +1,5 @@
-"""Shared utilities (HLO analysis, tree helpers)."""
+"""Shared utilities (HLO analysis, tree helpers, atomic JSON writes)."""
+
+from repro.utils.io import write_json_atomic
+
+__all__ = ["write_json_atomic"]

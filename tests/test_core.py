@@ -7,7 +7,7 @@ import numpy as np
 import pytest
 
 from repro.core import (AttentionSpec, NEG_INF, attention, bacam_scores,
-                        binarize_qk, binary_scores_exact, dense_reference,
+                        binary_scores_exact, dense_reference,
                         hamming_scores_packed, hoeffding_drop_bound,
                         pack_bits, sign_pm1, sign_ste, single_stage_topk,
                         topk_recall, two_stage_topk, unpack_bits)

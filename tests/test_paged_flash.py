@@ -18,7 +18,6 @@ from repro.core.attention import (AttentionSpec, attention,
                                   binary_paged_attention)
 from repro.core.backend import get_backend
 from repro.kernels import ops as kops
-from repro.kernels import paged_flash_decode as pfd
 from repro.kernels import ref as kref
 from repro.models import get_model_def
 from repro.models.module import init_params

@@ -13,7 +13,7 @@ from repro.core import (binary_scores_exact, pack_bits, sign_pm1,
                         unpack_bits)
 from repro.core.bacam import adc_readout, hamming_scores_packed
 from repro.sharding.compression import compressed_mean_ref
-from repro.sharding.partitioning import ACT_RULES, PARAM_RULES, resolve_spec
+from repro.sharding.partitioning import resolve_spec
 
 SETTINGS = settings(max_examples=25, deadline=None)
 

@@ -1,0 +1,70 @@
+"""Traffic-SLO benchmark harness: report shape, goodput accounting, and
+the atomic ``--json`` artifact write (a timed-out CI lane must never
+upload a truncated report)."""
+
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks import serve_slo  # noqa: E402
+from repro.utils import write_json_atomic  # noqa: E402
+
+
+def _args(**kw):
+    defaults = dict(
+        arch="codeqwen1.5-7b", backend="dense", requests=3, rate=50.0,
+        shared_frac=0.5, shared_len=8, max_new=2, max_batch=3, max_len=48,
+        page_size=8, n_pages=None, mode="overlap", temperature=0.7, seed=0,
+        slo_ttft_ms=60000.0, slo_tpot_ms=60000.0)
+    defaults.update(kw)
+    import argparse
+
+    return argparse.Namespace(**defaults)
+
+
+def test_inproc_report_shape_and_smoke_gate(tmp_path):
+    args = _args()
+    from repro.configs import smoke_config
+
+    workload = serve_slo.build_workload(args, smoke_config(args.arch).vocab)
+    assert len(workload) == args.requests
+    assert all(w["arrival_s"] > 0 for w in workload)
+    assert all(
+        len(w["prompt"]) + w["max_new"] <= args.max_len for w in workload)
+    # the shared system prompt actually appears in the mix (seeded rng)
+    shared = serve_slo._shared_prompt(args)
+    assert any(w["prompt"][:len(shared)] == shared for w in workload)
+
+    records, wall, view = serve_slo.drive_inproc(args, workload)
+    report = serve_slo.build_report(args, records, wall, view, "inproc")
+    for key in serve_slo.REQUIRED_KEYS:
+        assert key in report, key
+    assert report["completed"] == args.requests
+    assert report["cancelled"] == 0
+    assert report["goodput_rps"] > 0
+    assert report["tokens_per_s"] > 0
+    assert report["ttft_ms"]["n"] == args.requests
+    assert 0.0 < report["prefix_hit_rate"] < 1.0
+    assert report["engine"]["ticks"] > 0
+    serve_slo.check_report(report, smoke_ttft_bound_ms=60000.0)
+
+    # the gate actually fires on a violated bound
+    with pytest.raises(AssertionError):
+        serve_slo.check_report(report, smoke_ttft_bound_ms=1e-9)
+
+    out = tmp_path / "BENCH_slo_dense.json"
+    write_json_atomic(out, report)
+    assert json.loads(out.read_text())["backend"] == "dense"
+    assert not list(tmp_path.glob("*.tmp.*")), "temp file left behind"
+
+
+def test_write_json_atomic_overwrites(tmp_path):
+    p = tmp_path / "r.json"
+    write_json_atomic(p, {"a": 1})
+    write_json_atomic(p, {"a": 2})
+    assert json.loads(p.read_text()) == {"a": 2}
+    assert not list(tmp_path.glob("*.tmp.*"))

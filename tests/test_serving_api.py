@@ -84,8 +84,8 @@ def test_top_p_matches_numpy_reference(p):
     assert np.allclose(np.where(keep, logits, 0.0),
                        np.where(keep, got, 0.0))
     # the renormalized kept distribution matches the numpy reference
-    def norm(l):
-        e = np.exp(np.where(keep, l - l.max(-1, keepdims=True), -np.inf))
+    def norm(v):
+        e = np.exp(np.where(keep, v - v.max(-1, keepdims=True), -np.inf))
         return e / e.sum(-1, keepdims=True)
     assert np.allclose(norm(got), norm(logits), atol=1e-6)
     # sampling stays inside the nucleus
