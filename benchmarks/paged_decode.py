@@ -27,9 +27,19 @@ overlap win accumulates in the perf trajectory.
 
 Standalone:
 
+With ``--spec-k K`` a self-speculative lane rides along: the same engine
+run with K binary-stack drafts verified k+1 at a time per fused target
+step vs the plain loop, reporting end-to-end tokens/s and the measured
+draft acceptance rate; ``--smoke`` additionally gates spec >= plain
+tokens/s on the binary target (its acceptance is structural — drafter
+== target stack); dense/camformer smoke weights are random, so their
+lanes have no draft signal to track and are record-only.
+
+Standalone:
+
     PYTHONPATH=src:. python benchmarks/paged_decode.py \
         [--backend dense,camformer] [--max-batch 4] [--max-new 8] \
-        [--smoke] [--json BENCH.json]
+        [--spec-k 4] [--smoke] [--json BENCH.json]
 """
 
 import argparse
@@ -135,6 +145,41 @@ def bench_backend(backend: str, *, max_batch=4, max_new=8, page_size=16,
     return row
 
 
+def bench_spec(backend: str, *, spec_k, max_batch=4, max_new=8,
+               page_size=16, max_len=96, repeats=2):
+    """Self-speculative decoding lane: the SAME engine run with
+    ``spec_k`` binary-stack drafts per tick (k+1 positions verified in
+    one fused target step) vs the plain one-token loop, both sync +
+    greedy.  Reports end-to-end generated tokens/s per lane, the
+    tokens-per-tick amplification, and the measured draft acceptance
+    rate from the engine counters."""
+    prompts = [[3 + i, 5, 8, 1] for i in range(max_batch)]
+    total = max_batch * max_new  # greedy, fixed max_new: exact count
+    row = {"backend": backend, "spec_k": spec_k}
+    for lane, k in (("plain", 0), ("spec", spec_k)):
+        _, eng = _engine(backend, max_batch=max_batch, max_len=max_len,
+                         page_size=page_size, mode="sync", spec_k=k)
+        _timed_run(eng, prompts, max_new)  # warm-up: compile both steps
+        best = None
+        for _ in range(repeats):
+            wall, ticks, _, _ = _timed_run(eng, prompts, max_new)
+            m = {
+                "tokens_per_s": total / max(wall, 1e-9),
+                "ticks_per_s": ticks / max(wall, 1e-9),
+                "tokens_per_tick": total / max(ticks, 1),
+            }
+            if best is None or m["tokens_per_s"] > best["tokens_per_s"]:
+                best = m
+        row[lane] = best
+        if k:
+            row["proposed"] = eng.spec_proposed
+            row["accepted"] = eng.spec_accepted
+            row["acceptance"] = eng.spec_acceptance
+    row["spec_speedup"] = (row["spec"]["tokens_per_s"]
+                           / max(row["plain"]["tokens_per_s"], 1e-9))
+    return row
+
+
 def bench_continuous(backend: str, *, page_size=16, max_len=96, max_new=12):
     """Continuous-batching smoke: a long-prompt request joins while a
     resident slot decodes; with ``prefill_slice=page_size`` its prompt
@@ -195,14 +240,18 @@ def bench_prefix_sharing(backend="dense", *, n_requests=6, prefix_len=32,
     }
 
 
-def collect(backends, *, max_batch=4, max_new=8):
+def collect(backends, *, max_batch=4, max_new=8, spec_k=0):
     """One metrics payload covering every report — the single collection
     path shared by run() (run.py harness) and main() (standalone CLI)."""
-    payload = {"backends": {}, "continuous": {}, "sharing": {}}
+    payload = {"backends": {}, "continuous": {}, "sharing": {},
+               "speculative": {}}
     for b in backends:
         payload["backends"][b] = bench_backend(
             b, max_batch=max_batch, max_new=max_new)
         payload["continuous"][b] = bench_continuous(b)
+        if spec_k:
+            payload["speculative"][b] = bench_spec(
+                b, spec_k=spec_k, max_batch=max_batch, max_new=max_new)
     payload["sharing"][backends[0]] = bench_prefix_sharing(backends[0])
     return payload
 
@@ -269,6 +318,29 @@ def run(csv_rows, *, max_batch=4, max_new=8, backends=("dense", "camformer"),
                      cb["decode_ticks_during_prefill"],
                      "decode progress while a joiner prefills"))
 
+    for b, sp in payload.get("speculative", {}).items():
+        print(f"\n== self-speculative decoding ({b}): binary drafts, "
+              f"k={sp['spec_k']}, fused k+1 verify ==")
+        for lane in ("plain", "spec"):
+            m = sp[lane]
+            print(f"  {lane:6s} {m['tokens_per_s']:9.1f} tok/s "
+                  f"{m['ticks_per_s']:9.1f} ticks/s "
+                  f"{m['tokens_per_tick']:6.2f} tok/tick")
+        print(f"  acceptance {sp['accepted']}/{sp['proposed']} "
+              f"({sp['acceptance']:.0%}), end-to-end "
+              f"{sp['spec_speedup']:.2f}x tokens/s")
+        csv_rows.append((f"spec_decode_tokens_per_s_{b}_plain",
+                         sp["plain"]["tokens_per_s"], "spec_k=0 baseline"))
+        csv_rows.append((f"spec_decode_tokens_per_s_{b}_spec",
+                         sp["spec"]["tokens_per_s"],
+                         f"spec_k={sp['spec_k']} binary drafts"))
+        csv_rows.append((f"spec_decode_acceptance_{b}",
+                         sp["acceptance"],
+                         f"drafts accepted, k={sp['spec_k']} greedy"))
+        csv_rows.append((f"spec_decode_tokens_per_tick_{b}",
+                         sp["spec"]["tokens_per_tick"],
+                         "multi-token tick amplification"))
+
     share = payload["sharing"][backends[0]]
     print(f"\n== COW prefix sharing ({share['backend']}): "
           f"{share['n_requests']} requests, {share['prefix_len']}-token "
@@ -292,17 +364,57 @@ def main():
                     help="comma-separated backend sweep")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="also bench self-speculative decoding with this "
+                         "many binary-stack drafts per tick (0 = skip)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized run; asserts overlapped >= sync ticks/s")
+                    help="CI-sized run; asserts overlapped >= sync ticks/s "
+                         "and (with --spec-k) spec >= plain tokens/s")
     ap.add_argument("--json", default=None,
                     help="write the full metrics payload to this file")
     args = ap.parse_args()
     backends = tuple(args.backend.split(","))
     max_new = 6 if args.smoke else args.max_new
 
-    payload = collect(backends, max_batch=args.max_batch, max_new=max_new)
+    payload = collect(backends, max_batch=args.max_batch, max_new=max_new,
+                      spec_k=args.spec_k)
+    if args.smoke and args.spec_k and "binary" not in payload["speculative"]:
+        # the gated lane: binary drafts == the binary target by
+        # construction, so its acceptance (and the multi-token win) is
+        # structural, not a property of the smoke weights
+        payload["speculative"]["binary"] = bench_spec(
+            "binary", spec_k=args.spec_k, max_batch=args.max_batch,
+            max_new=max_new)
     run([], max_batch=args.max_batch, max_new=max_new, backends=backends,
         payload=payload)  # the one shared reporting path
+    if args.smoke and args.spec_k:
+        # The multi-token-tick win gate: with greedy drafts the accepted
+        # prefix amortizes the fixed per-tick host+dispatch cost, so
+        # end-to-end tokens/s must not regress vs the plain loop where
+        # acceptance is STRUCTURAL — the binary target, whose drafter is
+        # the very same stack (acceptance 1.0 by construction).  The
+        # dense/camformer smoke targets decode from RANDOM weights,
+        # where binarized drafting has no real-model signal to track
+        # (trained CAMformer checkpoints are the ~lossless regime the
+        # paper measures), so their lanes are recorded in the JSON for
+        # the trajectory, not asserted.
+        for b, sp in payload["speculative"].items():
+            if b != "binary":
+                continue
+            if sp["spec_speedup"] >= 1.0:
+                continue
+            # wall-clock race on a noisy runner: re-measure once with
+            # more repeats before declaring the multi-token win regressed
+            sp2 = bench_spec(b, spec_k=args.spec_k,
+                             max_batch=args.max_batch, max_new=max_new,
+                             repeats=4)
+            print(f"{b}: remeasured plain "
+                  f"{sp2['plain']['tokens_per_s']:.1f} | spec "
+                  f"{sp2['spec']['tokens_per_s']:.1f} tok/s "
+                  f"({sp2['acceptance']:.0%} accepted)")
+            assert sp2["spec_speedup"] >= 1.0, (
+                f"{b}: speculative decode slower than the plain loop "
+                f"(reproduced; acceptance {sp2['acceptance']:.0%})")
     if args.json:
         from repro.utils import write_json_atomic
 

@@ -58,6 +58,19 @@ class ModelConfig:
     # tokens, attending to the cache-so-far — bounds prefill activation
     # memory by the chunk instead of the full sequence.  0 = whole-sequence.
     prefill_chunk: int = 0
+    # Self-speculative decoding (serving): per tick a drafter stack — the
+    # SAME weights run with every layer forced to ``spec_backend`` —
+    # proposes spec_k tokens from its own cheap paged cache, and the
+    # target stack verifies all k+1 positions in one fused step.
+    # 0 disables speculation (token-for-token today's decode loop).
+    spec_k: int = 0
+    spec_backend: str = "binary"
+    # INTERNAL (models/transformer.lm_verify_paged): marks an Sq>1 pass
+    # as a speculative VERIFY chunk — stateful backends (binary/camformer
+    # k_scale) switch to sequential-decode semantics: per-query running
+    # scales, and the chunk's per-position key means stashed for exact
+    # accept-prefix rollback.  Never set directly.
+    spec_verify: bool = False
     window: Optional[int] = None  # sliding-window layers (hybrid)
 
     # --- misc transformer knobs ---
@@ -104,6 +117,12 @@ class ModelConfig:
                 f"paged_impl={self.paged_impl!r} must be 'fused' (Pallas "
                 "paged decode kernels) or 'gather' (XLA page-gather "
                 "reference)")
+        if self.spec_k < 0:
+            raise ValueError(f"spec_k={self.spec_k} must be >= 0")
+        if not self.spec_backend:
+            raise ValueError(
+                "spec_backend must name an attention backend "
+                "(core/backend.py registry name, e.g. 'binary')")
         if self.attn_mode is not None:
             raise ValueError(
                 f"attn_mode={self.attn_mode!r} was removed (deprecated in "

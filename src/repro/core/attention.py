@@ -275,8 +275,14 @@ def binary_paged_attention(
         scale = 1.0 / (d**0.5)
     kv_len = kv_len.reshape(b).astype(jnp.int32)
     q_scale = jnp.mean(jnp.abs(q.astype(jnp.float32)), axis=-1)  # (B,H,Sq)
-    temp = (q_scale.reshape(b, hkv, g * sq)
-            * k_scale.astype(jnp.float32)[:, :, None])  # (B,Hkv,G*Sq)
+    # k_scale: (B, Hkv) per-slot running scale, or (B, Hkv, Sq) per-QUERY
+    # scales (speculative verify chunks: column j's scale covers keys up
+    # to its own position — sequential-decode semantics).
+    ks = k_scale.astype(jnp.float32)
+    if ks.ndim == 2:
+        ks = ks[:, :, None]
+    ks = jnp.broadcast_to(ks[:, :, None, :], (b, hkv, g, sq))
+    temp = q_scale.reshape(b, hkv, g * sq) * ks.reshape(b, hkv, g * sq)
 
     if sq == 1 and impl == "fused":
         from repro.kernels import ops as kops  # local import: no cycle
@@ -404,8 +410,14 @@ def camformer_paged_attention(
         lambda vh, ph, rh: vh[ph, rh], in_axes=(1, 1, 1), out_axes=1
     )(v_pages, phys, row)  # (B, H_kv, R, K, Dv)
 
-    temp = (q_scale.reshape(b, hkv, g * sq)[..., None]
-            * k_scale[:, :, None, None])
+    # per-slot (B, Hkv) or per-query (B, Hkv, Sq) — see
+    # binary_paged_attention
+    ks = k_scale.astype(jnp.float32)
+    if ks.ndim == 2:
+        ks = ks[:, :, None]
+    ks = jnp.broadcast_to(ks[:, :, None, :], (b, hkv, g, sq))
+    temp = (q_scale.reshape(b, hkv, g * sq)
+            * ks.reshape(b, hkv, g * sq))[..., None]
     w, _ = topk_softmax_weights(top_v, temp, scale)
     out = jnp.einsum("bhrk,bhrkd->bhrd", w.astype(v_pages.dtype), v_sel)
     return out.reshape(b, h, sq, dv).astype(q.dtype)

@@ -160,6 +160,38 @@ def _running_k_scale(k_scale, k, pos, kv_len, base):
     return jnp.where((total > 0)[:, None], ks, k_scale)
 
 
+def _chunk_scale_seq(k_scale, k, pos, kv_len, base):
+    """Per-query running key scales for a speculative verify chunk.
+
+    The stored ``k_scale`` is one value per slot, which is correct for a
+    single-token decode step but not for an Sq>1 verify chunk: the query
+    at chunk column j must see the running mean over keys up to ITS OWN
+    position (``[base, pos+j]``) — the value the sequential decode loop
+    would have used — not a mean contaminated by the chunk's later keys.
+
+    Returns ``(per_query (B, H_kv, S), means (B, H_kv, S))`` — the
+    sequential-semantics scale per query column, and the chunk's
+    per-position valid-masked ``mean_d(|k|)`` (stashed in the ``k_means``
+    pool leaf so the host-planned rollback can rebuild the running mean
+    at ANY accepted length exactly; see serving/speculate.py).
+    """
+    b = k.shape[0]
+    valid = (pos < kv_len[:, None]).astype(jnp.float32)  # (B, S)
+    means = (jnp.mean(jnp.abs(k.astype(jnp.float32)), axis=3)
+             * valid[:, None, :])  # (B, Hkv, S)
+    if base is None:
+        base = jnp.zeros((b,), jnp.int32)
+    prior = jnp.clip(jnp.minimum(pos[:, 0], kv_len)
+                     - base.reshape(b).astype(jnp.int32),
+                     0, None).astype(jnp.float32)  # (B,)
+    cum = jnp.cumsum(means, axis=2)
+    cnt = prior[:, None] + jnp.cumsum(valid, axis=1)  # (B, S)
+    per_q = ((k_scale[:, :, None] * prior[:, None, None] + cum)
+             / jnp.maximum(cnt, 1.0)[:, None, :])
+    per_q = jnp.where((cnt > 0)[:, None, :], per_q, k_scale[:, :, None])
+    return per_q, means
+
+
 def _page_phys_rows(page_table, positions, page: int, kv_len=None):
     """(physical page, in-page row) of each logical position. Both (B, S).
 
@@ -422,6 +454,15 @@ class BinaryBackend(DenseBackend):
         spec["k_scale"] = (
             jax.ShapeDtypeStruct((max_batch, cfg.n_kv_heads), jnp.float32),
             ("batch", "kv_heads"))
+        if cfg.spec_k > 0:
+            # speculative verify scratch: the tick's per-position key
+            # means, so the accept-prefix rollback can rebuild the
+            # running k_scale at the accepted length exactly
+            spec["k_means"] = (
+                jax.ShapeDtypeStruct(
+                    (max_batch, cfg.n_kv_heads, cfg.spec_k + 1),
+                    jnp.float32),
+                ("batch", "kv_heads", None))
         return spec
 
     def _paged_write(self, cache, k, v, positions, page_table, kv_len=None,
@@ -434,15 +475,26 @@ class BinaryBackend(DenseBackend):
                else kv_len.reshape(b).astype(jnp.int32))
         pages["k_scale"] = _running_k_scale(
             cache["k_scale"], k, pos, kvl, base)
+        if "k_means" in cache:
+            pages["k_means"] = cache["k_means"]
         return pages
 
     def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
                      cfg, *, base=None):
         new_cache = self._paged_write(cache, k, v, positions, page_table,
                                       kv_len, base=base)
+        k_scale = new_cache["k_scale"]
+        if (q.shape[2] > 1 and cfg.spec_verify and "k_means" in new_cache
+                and new_cache["k_means"].shape[-1] == q.shape[2]):
+            # speculative verify chunk: sequential-semantics per-query
+            # scales, and stash the chunk means for exact rollback
+            k_scale, means = _chunk_scale_seq(
+                cache["k_scale"], k, positions.astype(jnp.int32),
+                kv_len.reshape(k.shape[0]).astype(jnp.int32), base)
+            new_cache["k_means"] = means
         out = binary_paged_attention(
             q, new_cache["k_pages"], new_cache["v_pages"],
-            new_cache["k_scale"], page_table, kv_len, positions,
+            k_scale, page_table, kv_len, positions,
             self.spec(cfg), window=cfg.window, impl=cfg.paged_impl)
         return out, new_cache
 
@@ -477,7 +529,7 @@ class CamformerBackend(AttentionBackend):
             raise ValueError(
                 f"page_size={page_size} must tile by "
                 f"group_size={cfg.group_size}")
-        return {
+        spec = {
             "kp_pages": (jax.ShapeDtypeStruct(
                 (n_pages, hkv, page_size, d // 32), jnp.uint32),
                 (None, "kv_heads", None, None)),
@@ -487,6 +539,15 @@ class CamformerBackend(AttentionBackend):
             "k_scale": (jax.ShapeDtypeStruct((max_batch, hkv), jnp.float32),
                         ("batch", "kv_heads")),
         }
+        if cfg.spec_k > 0:
+            # speculative verify scratch (see BinaryBackend.page_spec) —
+            # doubly necessary here: the packed pool stores signs only,
+            # so chunk key magnitudes are unrecoverable after the write
+            spec["k_means"] = (
+                jax.ShapeDtypeStruct(
+                    (max_batch, hkv, cfg.spec_k + 1), jnp.float32),
+                ("batch", "kv_heads", None))
+        return spec
 
     def cache_bytes_per_token(self, cfg, dtype):
         d = cfg.head_dim
@@ -523,9 +584,17 @@ class CamformerBackend(AttentionBackend):
                      cfg, *, base=None):
         new_cache = self._paged_write(
             cache, k, v, positions, page_table, kv_len, cfg, base=base)
+        k_scale = new_cache["k_scale"]
+        if (q.shape[2] > 1 and cfg.spec_verify and "k_means" in new_cache
+                and new_cache["k_means"].shape[-1] == q.shape[2]):
+            # speculative verify chunk (see BinaryBackend.paged_decode)
+            k_scale, means = _chunk_scale_seq(
+                cache["k_scale"], k, positions.astype(jnp.int32),
+                kv_len.reshape(k.shape[0]).astype(jnp.int32), base)
+            new_cache["k_means"] = means
         out = camformer_paged_attention(
             q, new_cache["kp_pages"], new_cache["v_pages"],
-            new_cache["k_scale"], page_table, kv_len, positions,
+            k_scale, page_table, kv_len, positions,
             self.spec(cfg), window=cfg.window, impl=cfg.paged_impl)
         return out, new_cache
 
@@ -578,7 +647,10 @@ class CamformerBackend(AttentionBackend):
             v.astype(cache["v_pages"].dtype).transpose(0, 2, 1, 3))
 
         ks = _running_k_scale(cache["k_scale"], k, pos, kv_len, base)
-        return {"kp_pages": new_kp, "v_pages": new_v, "k_scale": ks}
+        pages = {"kp_pages": new_kp, "v_pages": new_v, "k_scale": ks}
+        if "k_means" in cache:
+            pages["k_means"] = cache["k_means"]
+        return pages
 
     def _cache_attend(self, q, cache, kv_len, positions, cfg,
                       kv_positions=None):

@@ -84,36 +84,50 @@ def _kernel(
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    # --- per-page score tile (R, page): one MXU dot, never in HBM ---
-    q = q_ref[0, 0].astype(jnp.float32)  # (R, D) pre-scaled rows
-    k = k_ref[0, 0].astype(jnp.float32)  # (page, D) physical page tile
-    if binary:
-        k = jnp.where(k > 0, 1.0, -1.0)  # sign_pm1 semantics in-register
-    s = jax.lax.dot_general(
-        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
-
-    # --- masking: validity (kv length) + causality from the slot's
-    # decode position (decode rows share one qpos per slot) ---
     kvl = kvlen_ref[b]
     qpos = qpos_ref[b]
-    kpos = j * page + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1)
-    ok = jnp.logical_and(kpos < kvl, kpos <= qpos)
-    if window is not None:
-        ok = jnp.logical_and(ok, kpos > qpos - window)
-    s = jnp.where(ok, s, NEG_INF)
 
-    # --- online softmax update (flash_attention.py pattern) ---
-    m_prev = m_scr[:, 0]
-    m_new = jnp.maximum(m_prev, s.max(axis=-1))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new[:, None])
-    p = jnp.where(ok, p, 0.0)  # fully-masked (inert) rows stay all-zero
-    l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
-    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
-        p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32,
-    )
-    m_scr[:, 0] = m_new
+    # Dead tiles — logical pages at/after the slot's kv extent — are
+    # skipped outright: the index_map clamps them onto the last LIVE
+    # page (consecutive identical block indices, so the pipeline elides
+    # the page DMA instead of fetching trash) and this guard elides the
+    # compute.  A skipped tile leaves the streaming state untouched,
+    # which is exactly what the old fetch-then-mask update reduced to
+    # (all-NEG_INF scores: alpha = 1, p = 0).
+    @pl.when(j * page < kvl)
+    def _live_tile():
+        # --- per-page score tile (R, page): one MXU dot, not in HBM ---
+        q = q_ref[0, 0].astype(jnp.float32)  # (R, D) pre-scaled rows
+        k = k_ref[0, 0].astype(jnp.float32)  # (page, D) physical tile
+        if binary:
+            kb = jnp.where(k > 0, 1.0, -1.0)  # sign_pm1 in-register
+        else:
+            kb = k
+        s = jax.lax.dot_general(
+            q, kb, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        # --- masking: validity (kv length) + causality from the slot's
+        # decode position (decode rows share one qpos per slot) ---
+        kpos = (j * page
+                + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1))
+        ok = jnp.logical_and(kpos < kvl, kpos <= qpos)
+        if window is not None:
+            ok = jnp.logical_and(ok, kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        # --- online softmax update (flash_attention.py pattern) ---
+        m_prev = m_scr[:, 0]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(ok, p, 0.0)  # fully-masked rows stay all-zero
+        l_scr[:, 0] = l_scr[:, 0] * alpha + p.sum(axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[:, 0] = m_new
 
     @pl.when(j == nj - 1)
     def _finalize():
@@ -162,16 +176,23 @@ def paged_flash_decode(
     grid = (b, hkv, np_)
     kern = functools.partial(
         _kernel, page=page, binary=binary, window=window)
+
+    def _kv_map(b_, h, j, pt, kvl, qp):
+        # Dead logical pages (at/after the kv extent) clamp onto the
+        # slot's last LIVE page: the block index repeats, so the Pallas
+        # pipeline skips the redundant DMA and the kernel's `@pl.when`
+        # guard skips the compute — trash-extent tiles cost nothing.
+        last = jnp.maximum((kvl[b_] - 1) // page, 0)
+        return (pt[b_, jnp.where(j * page < kvl[b_], j, last)], h, 0, 0)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=3,  # page_table, kv_len, q_pos
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, rows, d),
                          lambda b_, h, j, pt, kvl, qp: (b_, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, d),
-                         lambda b_, h, j, pt, kvl, qp: (pt[b_, j], h, 0, 0)),
-            pl.BlockSpec((1, 1, page, dv),
-                         lambda b_, h, j, pt, kvl, qp: (pt[b_, j], h, 0, 0)),
+            pl.BlockSpec((1, 1, page, d), _kv_map),
+            pl.BlockSpec((1, 1, page, dv), _kv_map),
         ],
         out_specs=[
             pl.BlockSpec((1, 1, rows, dv),

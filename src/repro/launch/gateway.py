@@ -50,6 +50,8 @@ def build_engine(args) -> ServeEngine:
         mode=args.mode,
         prefill_slice=args.prefill_slice,
         paged_impl=args.paged_impl,
+        spec_k=args.spec_k,
+        spec_backend=args.spec_backend,
     )
 
 
@@ -74,6 +76,15 @@ def main() -> None:
         "this many tokens across ticks",
     )
     ap.add_argument("--paged-impl", default=None, choices=("fused", "gather"))
+    ap.add_argument(
+        "--spec-k",
+        type=int,
+        default=None,
+        help="self-speculative decoding: binary-stack drafts per tick, "
+        "verified k+1 at a time in one fused target step (0 = off)",
+    )
+    ap.add_argument("--spec-backend", default=None,
+                    help="drafter attention backend (default 'binary')")
     args = ap.parse_args()
 
     engine = build_engine(args)

@@ -62,6 +62,13 @@ def main():
                     help="paged decode realization: fused Pallas "
                          "flash/CAM kernels (default) or the XLA "
                          "page-gather reference")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="self-speculative decoding: draft this many "
+                         "tokens per tick with the binary stack and "
+                         "verify k+1 positions in one fused target step "
+                         "(0 = off, token-for-token plain decode)")
+    ap.add_argument("--spec-backend", default=None,
+                    help="drafter attention backend (default 'binary')")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress per-token output, print only summaries")
     args = ap.parse_args()
@@ -76,7 +83,8 @@ def main():
                       max_len=args.max_len, page_size=args.page_size,
                       n_pages=args.n_pages, mode=args.mode,
                       prefill_slice=args.prefill_slice,
-                      paged_impl=args.paged_impl)
+                      paged_impl=args.paged_impl,
+                      spec_k=args.spec_k, spec_backend=args.spec_backend)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
     print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
           f"{eng.kv.page_size} tokens "
@@ -103,6 +111,10 @@ def main():
           f"({eng.ticks / max(wall, 1e-9):.1f} ticks/s), "
           f"{eng.readbacks} readbacks, host idle "
           f"{eng.blocked_s / max(wall, 1e-9):.0%}")
+    if eng.spec_k:
+        print(f"speculation: k={eng.spec_k}, "
+              f"{eng.spec_accepted}/{eng.spec_proposed} drafts accepted "
+              f"({eng.spec_acceptance:.0%})")
     print(f"peak pool residency: {eng.peak_pages}/{eng.kv.n_pages - 1} pages"
           f" ({eng.kv.shared_pages} still shared, "
           f"{eng.kv.retained_pages} prefix pages retained at drain)")

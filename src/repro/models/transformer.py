@@ -27,7 +27,8 @@ from repro.sharding.partitioning import constrain
 
 __all__ = ["ModelDef", "stack_specs", "lm_specs", "lm_hidden", "lm_loss",
            "lm_prefill", "lm_decode", "lm_cache_specs", "lm_page_specs",
-           "lm_prefill_paged", "lm_decode_paged", "dtype_of"]
+           "lm_prefill_paged", "lm_decode_paged", "lm_verify_paged",
+           "dtype_of"]
 
 
 class ModelDef(NamedTuple):
@@ -42,9 +43,11 @@ class ModelDef(NamedTuple):
     # page_specs(cfg, n_pages, page_size, max_batch) -> tree of (SDS, axes)
     # prefill_paged(params, batch{tokens,lens[,offsets]}, pools, table, cfg)
     # decode_paged(params, tokens, pos, kv_len, pools, table, cfg[, base])
+    # verify_paged(params, batch, pools, table, cfg) -> ((B,S,V), pools)
     page_specs: Optional[Callable[..., Any]] = None
     prefill_paged: Optional[Callable[..., Any]] = None
     decode_paged: Optional[Callable[..., Any]] = None
+    verify_paged: Optional[Callable[..., Any]] = None
 
 
 def dtype_of(cfg):
@@ -276,26 +279,13 @@ def lm_page_specs(cfg, n_pages: int, page_size: int, max_batch: int):
                  for bk in bks)
 
 
-def lm_prefill_paged(params, batch, caches, page_table, cfg):
-    """Batched prefill into the paged cache.
+def _paged_suffix_hidden(params, batch, caches, page_table, cfg):
+    """Shared hidden path of the paged Sq>1 seam (prefill + verify).
 
-    batch: tokens (B, S) right-padded prompt SUFFIXES, lens (B,) TOTAL
-    valid lengths (lens == 0 marks an inactive slot whose page-table row
-    must point at the trash page), and optional offsets (B,) — each
-    slot's first computed position.  A nonzero offset means positions
-    [0, offset) live in already-written pages — a copy-on-write shared
-    prefix, or (continuous batching) this slot's OWN earlier prefill
-    chunks: the slot's tokens are the suffix starting at ``offset``,
-    attending through the page table to the earlier rows.  Optional
-    ``scale_base`` (B,) separates the per-slot running-statistics origin
-    from the chunk offset: positions >= scale_base were computed by THIS
-    slot (they count toward camformer's k_scale running mean across
-    chunks), positions below it live in another slot's shared pages.  It
-    defaults to ``offsets`` (single-dispatch prefill, where the two
-    coincide).  With cfg.prefill_chunk set and S a chunk multiple, the
-    suffix batch is processed in chunks that attend to the pages written
-    so far (chunked prefill, activation memory bounded by the chunk).
-    Returns (per-slot last-suffix-token logits (B, V), pools).
+    batch: tokens (B, S) right-padded suffixes at positions
+    ``offsets + arange(S)``, lens (B,) TOTAL valid lengths, optional
+    offsets / scale_base — see ``lm_prefill_paged``.  Returns the full
+    per-position hidden states (x (B, S, d), pools).
     """
     tokens, lens = batch["tokens"], batch["lens"].astype(jnp.int32)
     b, s = tokens.shape
@@ -327,12 +317,60 @@ def lm_prefill_paged(params, batch, caches, page_table, cfg):
         x, caches, _ = lm_hidden(
             params, tokens, cfg, positions=pos, caches=caches, kv_len=lens,
             page_table=page_table, scale_base=scale_base, causal=True)
+    return x, caches
+
+
+def lm_prefill_paged(params, batch, caches, page_table, cfg):
+    """Batched prefill into the paged cache.
+
+    batch: tokens (B, S) right-padded prompt SUFFIXES, lens (B,) TOTAL
+    valid lengths (lens == 0 marks an inactive slot whose page-table row
+    must point at the trash page), and optional offsets (B,) — each
+    slot's first computed position.  A nonzero offset means positions
+    [0, offset) live in already-written pages — a copy-on-write shared
+    prefix, or (continuous batching) this slot's OWN earlier prefill
+    chunks: the slot's tokens are the suffix starting at ``offset``,
+    attending through the page table to the earlier rows.  Optional
+    ``scale_base`` (B,) separates the per-slot running-statistics origin
+    from the chunk offset: positions >= scale_base were computed by THIS
+    slot (they count toward camformer's k_scale running mean across
+    chunks), positions below it live in another slot's shared pages.  It
+    defaults to ``offsets`` (single-dispatch prefill, where the two
+    coincide).  With cfg.prefill_chunk set and S a chunk multiple, the
+    suffix batch is processed in chunks that attend to the pages written
+    so far (chunked prefill, activation memory bounded by the chunk).
+    Returns (per-slot last-suffix-token logits (B, V), pools).
+    """
+    lens = batch["lens"].astype(jnp.int32)
+    offsets = batch.get("offsets")
+    offsets = (jnp.zeros(lens.shape, jnp.int32) if offsets is None
+               else offsets.astype(jnp.int32))
+    x, caches = _paged_suffix_hidden(params, batch, caches, page_table, cfg)
     # the final valid token sits at suffix row (lens - offsets - 1)
     last = jnp.take_along_axis(
-        x, jnp.clip(lens - offsets - 1, 0, s - 1)[:, None, None].astype(
-            jnp.int32),
+        x, jnp.clip(lens - offsets - 1, 0, x.shape[1] - 1)[
+            :, None, None].astype(jnp.int32),
         axis=1)[:, 0]
     return _head_logits(params, last, cfg), caches
+
+
+def lm_verify_paged(params, batch, caches, page_table, cfg):
+    """Speculative-decode verification over the paged Sq>1 seam.
+
+    Identical contract to ``lm_prefill_paged`` but returns the logits of
+    EVERY suffix position — (B, S, V) — so the engine can score all k+1
+    speculative positions in one fused step (row j holds the target
+    distribution for the token AFTER input position offsets + j).
+
+    The pass runs under ``spec_verify`` semantics: stateful backends use
+    per-query running ``k_scale`` (each chunk column sees exactly the
+    scale the sequential loop would have used at its position) and stash
+    the chunk's key means for exact rollback.  The chunk is k+1 tokens,
+    so it never needs ``prefill_chunk`` slicing.
+    """
+    cfg = cfg.replace(spec_verify=True, prefill_chunk=0)
+    x, caches = _paged_suffix_hidden(params, batch, caches, page_table, cfg)
+    return _all_logits(params, x, cfg), caches
 
 
 def lm_decode_paged(params, tokens, pos, kv_len, caches, page_table, cfg,
@@ -366,6 +404,21 @@ def _last_logits(params, x, cfg):
     return _head_logits(params, x[:, -1], cfg)
 
 
+def _all_logits(params, x, cfg):
+    """Vocabulary logits for every position of x (B, S, d) -> (B, S, V)."""
+    dt = x.dtype
+    if cfg.tie_embeddings:
+        head = params["embed"]["tok"].astype(dt).T
+    else:
+        head = params["embed"]["head"].astype(dt)
+    logits = x @ head
+    logits = constrain(logits, ("batch", None, "vocab")).astype(jnp.float32)
+    if logits.shape[-1] > cfg.vocab:  # vocab-padding columns never sampled
+        logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                           logits, -1e9)
+    return logits
+
+
 def _head_logits(params, last, cfg):
     """Vocabulary logits for per-slot final hidden states last (B, d)."""
     dt = last.dtype
@@ -391,4 +444,5 @@ def make_model_def():
         page_specs=lm_page_specs,
         prefill_paged=lm_prefill_paged,
         decode_paged=lm_decode_paged,
+        verify_paged=lm_verify_paged,
     )

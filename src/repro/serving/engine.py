@@ -54,6 +54,7 @@ import numpy as np
 from repro.launch.steps import cast_params
 from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
+from repro.serving import speculate
 from repro.serving.kv_cache import PagedKVCache, pages_for
 from repro.serving.request import (Request, RequestOutput, RequestState,
                                    SamplingParams)
@@ -93,8 +94,10 @@ class _InFlight(NamedTuple):
 
     prefill_tok: Optional[jax.Array]  # (B,) sampled first tokens
     prefill_emit: Tuple[Emit, ...]
-    decode_tok: Optional[jax.Array]  # (B,) sampled decode tokens
+    decode_tok: Optional[jax.Array]  # (B,) sampled decode tokens, or the
+    #                                   (B, m+1) spec pack (samples ++ n_valid)
     decode_emit: Tuple[Emit, ...]
+    spec: bool = False  # decode_tok is a speculative multi-token pack
 
     @property
     def empty(self) -> bool:
@@ -107,7 +110,9 @@ class ServeEngine:
                  page_size: int = 64, n_pages: Optional[int] = None,
                  prefix_sharing: bool = True, mode: str = "overlap",
                  prefill_slice: Optional[int] = None,
-                 paged_impl: Optional[str] = None):
+                 paged_impl: Optional[str] = None,
+                 spec_k: Optional[int] = None,
+                 spec_backend: Optional[str] = None):
         if paged_impl is not None:
             # per-engine override of the decode realization: "fused"
             # (Pallas paged flash/CAM kernels, the default) vs "gather"
@@ -115,6 +120,13 @@ class ServeEngine:
             # layer's backend.paged_decode inside the fused device step
             # sees it; ModelConfig validates the value
             cfg = cfg.replace(paged_impl=paged_impl)
+        if spec_k is not None or spec_backend is not None:
+            # per-engine override of the speculative-decoding policy —
+            # rides on cfg like paged_impl (ModelConfig validates)
+            cfg = cfg.replace(
+                spec_k=cfg.spec_k if spec_k is None else spec_k,
+                spec_backend=(cfg.spec_backend if spec_backend is None
+                              else spec_backend))
         if md.page_specs is None:
             raise ValueError(
                 f"{cfg.name!r} (family {cfg.family!r}) does not expose the "
@@ -141,18 +153,34 @@ class ServeEngine:
             # Smaller pools trade capacity for admission backpressure.
             n_pages = 1 + max_batch * per_seq  # +1: trash page
         self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
+        self.spec_k = cfg.spec_k
         self.sched = Scheduler(
             self.kv, max_batch=max_batch, max_len=max_len, seed=seed,
             prefix_sharing=prefix_sharing, prefill_slice=prefill_slice,
-            prefill_bucket=chunk or PREFILL_BUCKET)
+            prefill_bucket=chunk or PREFILL_BUCKET, spec_k=self.spec_k)
         specs = md.page_specs(cfg, n_pages, page_size, max_batch)
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
-        self.caches = jax.tree.map(
-            lambda t: jnp.zeros(t[0].shape, t[0].dtype), specs,
-            is_leaf=is_leaf)
+        zeros = lambda t: jnp.zeros(t[0].shape, t[0].dtype)
+        self.caches = jax.tree.map(zeros, specs, is_leaf=is_leaf)
+        # speculative decoding: the drafter stack (same weights, every
+        # layer forced to cfg.spec_backend) keeps its OWN page pools on
+        # the SAME page table, so admission / COW forks / rollback are
+        # planned once for both (serving/speculate.py)
+        self.draft_caches = None
+        self._draft_cfg = None
+        if self.spec_k:
+            if md.verify_paged is None:
+                raise ValueError(
+                    f"{cfg.name!r} does not expose verify_paged "
+                    "(all-position logits), required for spec_k > 0")
+            self._draft_cfg = speculate.draft_config(cfg)
+            dspecs = md.page_specs(self._draft_cfg, n_pages, page_size,
+                                   max_batch)
+            self.draft_caches = jax.tree.map(zeros, dspecs, is_leaf=is_leaf)
         self._prefill_jits = {}  # hot -> jitted fused prefill-chunk step
         self._decode_jits = {}  # hot -> jitted fused decode step
+        self._spec_jits = {}  # hot -> jitted fused draft+verify step
         self._fork = jax.jit(_copy_pool_page)
         # double-buffered on-device token state: the decode step's input
         # tokens are the previous step's output, never a host round-trip
@@ -213,28 +241,54 @@ class ServeEngine:
     def preemptions(self) -> int:
         return self.sched.preemptions
 
+    @property
+    def spec_proposed(self) -> int:
+        """Draft tokens proposed by the speculative drafter stack."""
+        return self.sched.spec_proposed
+
+    @property
+    def spec_accepted(self) -> int:
+        """Proposed draft tokens the target stack verified and kept."""
+        return self.sched.spec_accepted
+
+    @property
+    def spec_acceptance(self) -> float:
+        """spec_accepted / spec_proposed (0.0 before any speculation)."""
+        return self.sched.spec_acceptance
+
     # ------------------------------------------------------------------
     # the fused device step (everything per tick inside one jit)
     # ------------------------------------------------------------------
     def _prefill_jit(self, hot: bool):
         if hot not in self._prefill_jits:
             md, cfg = self.md, self.cfg
+            if self.spec_k:
+                fn = speculate.build_spec_prefill(md, cfg, self._draft_cfg,
+                                                  hot)
+            else:
 
-            def fn(params, tokens, lens, offsets, scale_base, caches, pt,
-                   keys, index, temps, top_ks, top_ps):
-                batch = {"tokens": tokens, "lens": lens, "offsets": offsets,
-                         "scale_base": scale_base}
-                logits, caches = md.prefill_paged(params, batch, caches, pt,
-                                                  cfg)
-                if hot:
-                    first = S.sample_step_keyed(logits, keys, index, temps,
-                                                top_ks, top_ps)
-                else:
-                    first = S.greedy(logits)
-                return first, caches
+                def fn(params, tokens, lens, offsets, scale_base, caches,
+                       pt, keys, index, temps, top_ks, top_ps):
+                    batch = {"tokens": tokens, "lens": lens,
+                             "offsets": offsets, "scale_base": scale_base}
+                    logits, caches = md.prefill_paged(params, batch, caches,
+                                                      pt, cfg)
+                    if hot:
+                        first = S.sample_step_keyed(logits, keys, index,
+                                                    temps, top_ks, top_ps)
+                    else:
+                        first = S.greedy(logits)
+                    return first, caches
 
             self._prefill_jits[hot] = jax.jit(fn)
         return self._prefill_jits[hot]
+
+    def _spec_jit(self, hot: bool):
+        if hot not in self._spec_jits:
+            fn = speculate.build_spec_step(
+                self.md, self.cfg, self._draft_cfg, self.spec_k + 1, hot)
+            self._spec_jits[hot] = jax.jit(fn)
+        return self._spec_jits[hot]
 
     def _decode_jit(self, hot: bool):
         if hot not in self._decode_jits:
@@ -267,6 +321,9 @@ class ServeEngine:
         for src, dst in plan.forks:  # COW copies BEFORE any write
             self.caches = self._fork(
                 self.caches, jnp.int32(src), jnp.int32(dst))
+            if self.draft_caches is not None:  # drafter aliases the same
+                self.draft_caches = self._fork(  # page ids: fork both
+                    self.draft_caches, jnp.int32(src), jnp.int32(dst))
         keys = jnp.asarray(plan.keys)
         temps = jnp.asarray(plan.temps)
         top_ks = jnp.asarray(plan.top_ks)
@@ -275,16 +332,36 @@ class ServeEngine:
         fresh, fresh_mask = self._zero_tok, None
         pf = plan.prefill
         if pf is not None:
-            first, self.caches = self._prefill_jit(pf.hot)(
-                self.params, jnp.asarray(pf.tokens), jnp.asarray(pf.lens),
-                jnp.asarray(pf.offsets), jnp.asarray(pf.scale_base),
-                self.caches, jnp.asarray(pf.table), keys,
-                jnp.asarray(pf.sample_index), temps, top_ks, top_ps)
+            if self.spec_k:
+                first, self.caches, self.draft_caches = self._prefill_jit(
+                    pf.hot)(
+                    self.params, jnp.asarray(pf.tokens),
+                    jnp.asarray(pf.lens), jnp.asarray(pf.offsets),
+                    jnp.asarray(pf.scale_base), self.caches,
+                    self.draft_caches, jnp.asarray(pf.table), keys,
+                    jnp.asarray(pf.sample_index), temps, top_ks, top_ps)
+            else:
+                first, self.caches = self._prefill_jit(pf.hot)(
+                    self.params, jnp.asarray(pf.tokens),
+                    jnp.asarray(pf.lens), jnp.asarray(pf.offsets),
+                    jnp.asarray(pf.scale_base), self.caches,
+                    jnp.asarray(pf.table), keys,
+                    jnp.asarray(pf.sample_index), temps, top_ks, top_ps)
             if pf.emit:
                 prefill_tok = fresh = first
         dc = plan.decode
         decode_tok = None
-        if dc is not None:
+        if dc is not None and self.spec_k:
+            fresh_mask = jnp.asarray(dc.fresh)
+            decode_tok, self._tok_buf, self.caches, self.draft_caches = (
+                self._spec_jit(dc.hot)(
+                    self.params, self._tok_buf, fresh, fresh_mask,
+                    jnp.asarray(dc.live), jnp.asarray(dc.pos),
+                    jnp.asarray(dc.n_tok), self.caches, self.draft_caches,
+                    jnp.asarray(dc.table), jnp.asarray(dc.base), keys,
+                    jnp.asarray(dc.sample_index), temps, top_ks, top_ps))
+            self.ticks += 1
+        elif dc is not None:
             fresh_mask = jnp.asarray(dc.fresh)
             decode_tok, self.caches = self._decode_jit(dc.hot)(
                 self.params, self._tok_buf, fresh, fresh_mask,
@@ -304,7 +381,8 @@ class ServeEngine:
             self._tok_buf = jnp.where(jnp.asarray(mask), fresh,
                                       self._tok_buf)
         return _InFlight(prefill_tok, pf.emit if pf else (),
-                         decode_tok, dc.emit if dc else ())
+                         decode_tok, dc.emit if dc else (),
+                         bool(self.spec_k and dc is not None))
 
     def _read(self, arr: jax.Array) -> np.ndarray:
         """THE host<->device readback (token ids only); instrumented so
@@ -318,17 +396,34 @@ class ServeEngine:
 
     def _collect(self, inflight: _InFlight) -> List[RequestOutput]:
         """Read a dispatched tick's sampled ids and surface them (first
-        prefill samples, then decode samples — the sync event order)."""
+        prefill samples, then decode samples — the sync event order).
+
+        Speculative ticks read ONE packed (B, m+1) array — per-slot
+        target samples plus the accepted count — and settle each slot's
+        emit run through ``Scheduler.resolve_spec`` (accepted prefix
+        ingested, rejected suffix dropped + rolled back)."""
         events: List[RequestOutput] = []
-        for arr, emits in ((inflight.prefill_tok, inflight.prefill_emit),
-                           (inflight.decode_tok, inflight.decode_emit)):
-            if not emits:
-                continue
-            vals = self._read(arr)
-            for e in emits:
+        if inflight.prefill_emit:
+            vals = self._read(inflight.prefill_tok)
+            for e in inflight.prefill_emit:
                 out = self.sched.ingest(e, int(vals[e.slot]))
                 if out is not None:
                     events.append(out)
+        if inflight.decode_emit:
+            vals = self._read(inflight.decode_tok)
+            if inflight.spec:
+                groups: "dict[int, List[Emit]]" = {}
+                for e in inflight.decode_emit:  # slot-major consecutive
+                    groups.setdefault(e.slot, []).append(e)
+                for slot, ems in groups.items():
+                    events.extend(self.sched.resolve_spec(
+                        slot, tuple(ems), vals[slot],
+                        int(vals[slot, -1])))
+            else:
+                for e in inflight.decode_emit:
+                    out = self.sched.ingest(e, int(vals[e.slot]))
+                    if out is not None:
+                        events.append(out)
         return events
 
     # ------------------------------------------------------------------

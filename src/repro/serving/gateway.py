@@ -495,6 +495,9 @@ class Gateway:
             "blocked_s": eng.blocked_s,
             "peak_pages": eng.peak_pages,
             "preemptions": eng.preemptions,
+            "spec_proposed": eng.spec_proposed,
+            "spec_accepted": eng.spec_accepted,
+            "spec_acceptance": eng.spec_acceptance,
             "free_pages": eng.kv.free_pages,
             "pool_pages": eng.kv.n_pages - 1,
             "queue_depth": len(eng.queue),

@@ -258,6 +258,87 @@ class PagedKVCache:
     def owned(self, slot: int) -> List[int]:
         return list(self._owned[slot])
 
+    def truncate_to(self, slot: int, length: int) -> List[Tuple[int, int]]:
+        """Shrink `slot` to its first `length` logical tokens (speculative-
+        decode rollback).  Pages wholly beyond the keep point are released
+        exactly like ``release`` (refcount--, retained-or-freed, registry
+        entries of freed pages dropped).  The BOUNDARY page — the partial
+        page that will receive the slot's next write at row
+        ``length % page_size`` — must never be written while shared: if it
+        is COW-aliased it is forked (a fresh private page, returned as an
+        ``[(src, dst)]`` copy job for the engine's device-side page copy)
+        or the call refuses with MemoryError when the pool cannot supply
+        the fork page.  Registry entries claiming rows of the kept
+        boundary page beyond the keep point are dropped (the slot is about
+        to rewrite those rows with different tokens), which keeps
+        hash-matching sound after rollback.  Idempotent: truncating twice
+        to the same length is a no-op the second time.
+        """
+        if not 0 <= slot < self.max_batch:
+            raise ValueError(
+                f"truncate of unknown slot {slot} "
+                f"(max_batch={self.max_batch})")
+        if length < 0:
+            raise ValueError(f"cannot truncate slot {slot} to {length}")
+        ps = self.page_size
+        owned = self._owned[slot]
+        keep = pages_for(length, ps)
+        # -- release pages wholly beyond the keep point (release() logic)
+        freed: List[int] = []
+        for page in owned[keep:]:
+            self.page_refs[page] -= 1
+            if self.page_refs[page] == 0:
+                if (self.retain_prefixes and page in self._page_keys
+                        and page not in self._pending):
+                    self._retained[page] = None
+                    continue
+                for kind, key in self._page_keys.pop(page, ()):
+                    (self._prefix if kind == "full" else self._tail).pop(
+                        key, None)
+                self._pending.discard(page)
+                freed.append(page)
+        self._free.extend(reversed(freed))
+        del owned[keep:]
+        self.table[slot, keep:] = TRASH_PAGE
+        # -- boundary page: kept partially, rewritten from row length%ps
+        rows_kept = length % ps
+        if not rows_kept or keep - 1 >= len(owned):
+            return []
+        src = owned[keep - 1]
+        forks: List[Tuple[int, int]] = []
+        if self.page_refs[src] > 1:
+            # never write a shared page: fork it (or refuse).  The source
+            # keeps its registry entries and its other owners.
+            dst = self._alloc_page(avoid=(src,))
+            if dst is None:
+                raise MemoryError(
+                    f"page pool exhausted forking shared boundary page "
+                    f"{src} truncating slot {slot} to {length} tokens")
+            self.page_refs[dst] = 1
+            self.page_refs[src] -= 1
+            owned[keep - 1] = dst
+            self.table[slot, keep - 1] = dst
+            forks.append((src, dst))
+        else:
+            # private boundary page: registry claims over rows the slot is
+            # about to rewrite are now stale — drop them.
+            survivors: List[tuple] = []
+            for kind, key in self._page_keys.get(src, ()):
+                stale = (kind == "full"
+                         or self._tail.get(key, (None, 0))[1] > rows_kept)
+                if stale:
+                    (self._prefix if kind == "full" else self._tail).pop(
+                        key, None)
+                else:
+                    survivors.append((kind, key))
+            if src in self._page_keys:
+                if survivors:
+                    self._page_keys[src] = survivors
+                else:
+                    del self._page_keys[src]
+                    self._pending.discard(src)
+        return forks
+
     # -- copy-on-write prefix sharing ----------------------------------
     def match_prefix(self, prompt: List[int]) -> PrefixMatch:
         """Longest registered prefix of ``prompt`` (capped at len-1).

@@ -90,18 +90,27 @@ class PrefillChunk(NamedTuple):
 
 
 class DecodeTick(NamedTuple):
-    """One tick's decode work over every DECODING row."""
+    """One tick's decode work over every DECODING row.
 
-    pos: np.ndarray  # (B,) position written this tick
+    Multi-token ticks (speculative decoding, future Medusa-style heads):
+    ``n_tok[i] > 1`` means row ``i`` dispatches ``n_tok[i]`` consecutive
+    generated-token indices this tick — its ``emit`` records are
+    slot-major consecutive — and ``pos[i]`` is the FIRST position
+    written.  Plain decode is the ``n_tok == 1`` degenerate case.
+    """
+
+    pos: np.ndarray  # (B,) first position written this tick
     kv_len: np.ndarray  # (B,) pos+1 for live rows, 0 for inert rows
     base: np.ndarray  # (B,) prefix-sharing offset
     table: np.ndarray  # (B, P) page-table snapshot, inert rows trashed
-    sample_index: np.ndarray  # (B,) generated-token index sampled per row
+    sample_index: np.ndarray  # (B,) FIRST generated-token index per row
     live: np.ndarray  # (B,) bool — rows decoding this tick
     fresh: np.ndarray  # (B,) bool — input token comes from THIS tick's
     #                     prefill sample (first decode after admission)
     hot: bool  # any live row samples with temperature > 0
     emit: Tuple[Emit, ...]
+    n_tok: Optional[np.ndarray] = None  # (B,) tokens dispatched per row
+    #                     (None <=> all-ones: the plain single-token tick)
 
 
 class TickPlan(NamedTuple):
@@ -130,15 +139,18 @@ class Scheduler:
     def __init__(self, kv: PagedKVCache, *, max_batch: int, max_len: int,
                  seed: int = 0, prefix_sharing: bool = True,
                  prefill_slice: Optional[int] = None,
-                 prefill_bucket: int = 16):
+                 prefill_bucket: int = 16, spec_k: int = 0):
         self.kv = kv
         self.max_batch, self.max_len = max_batch, max_len
         self.seed = seed
         self.prefix_sharing = prefix_sharing
         if prefill_slice is not None and prefill_slice < 1:
             raise ValueError(f"prefill_slice must be >= 1, got {prefill_slice}")
+        if spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {spec_k}")
         self.prefill_slice = prefill_slice
         self.prefill_bucket = prefill_bucket
+        self.spec_k = spec_k
 
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -146,6 +158,14 @@ class Scheduler:
         self.peak_pages = 0  # high-water mark of actively-owned pages
         self.preemptions = 0  # page-pressure evictions (gateway /metrics
         #                       and the traffic-SLO benchmark report this)
+        self.spec_proposed = 0  # draft tokens proposed (spec_k > 0)
+        self.spec_accepted = 0  # draft tokens the target verified
+        # slots whose multi-token tick is dispatched but not yet resolved
+        # (rollback may rewind their pos/dispatched/pages): excluded from
+        # planning and drain until resolve_spec runs.  Keyed by slot,
+        # valued by the Request identity so a preempt-then-reassign of
+        # the slot never blocks (or rolls back) the new occupant.
+        self._spec_unread: dict = {}
 
         b = max_batch
         self.pos = np.zeros(b, np.int32)  # next decode position per slot
@@ -343,7 +363,10 @@ class Scheduler:
         been read yet.  Ingest finishes the request when it arrives."""
         for slot, r in enumerate(self.active):
             if (r is not None and r.state is RequestState.DECODING
-                    and self.dispatched[slot] >= self.max_toks[slot]):
+                    and self.dispatched[slot] >= self.max_toks[slot]
+                    and self._spec_unread.get(slot) is not r):
+                # a spec-unread slot may roll dispatched back below the
+                # budget at resolve time — never drain it early
                 self.kv.release(slot)
                 self.active[slot] = None
                 self._retiring.append(r)
@@ -401,7 +424,8 @@ class Scheduler:
     def _plan_decode(self, fresh_slots: Tuple[int, ...]) -> Optional[DecodeTick]:
         live = [i for i, r in enumerate(self.active)
                 if (r is not None and r.state is RequestState.DECODING
-                    and self.dispatched[i] < self.max_toks[i])]
+                    and self.dispatched[i] < self.max_toks[i]
+                    and self._spec_unread.get(i) is not r)]
         if not live:
             return None
         b = self.max_batch
@@ -413,18 +437,30 @@ class Scheduler:
         kv_len = np.where(live_mask, self.pos + 1, 0).astype(np.int32)
         table = np.where(live_mask[:, None], self.kv.table, TRASH_PAGE)
         sample_index = self.dispatched.copy()
+        n_tok = np.where(live_mask, 1, 0).astype(np.int32)
         emit = []
         hot = False
         for i in live:
             r = self.active[i]
-            emit.append(Emit(i, r, int(self.dispatched[i])))
-            r._inflight += 1
-            self._inflight_total += 1
-            self.dispatched[i] += 1
-            self.pos[i] += 1
+            # multi-token tick: dispatch up to spec_k drafts + 1 sample,
+            # capped at the slot's remaining generation budget; the
+            # resolve step rolls back whatever the target rejects
+            m = (1 if self.spec_k == 0 else
+                 min(self.spec_k + 1,
+                     int(self.max_toks[i] - self.dispatched[i])))
+            n_tok[i] = m
+            for j in range(m):
+                emit.append(Emit(i, r, int(self.dispatched[i]) + j))
+            r._inflight += m
+            self._inflight_total += m
+            self.dispatched[i] += m
+            self.pos[i] += m
+            if self.spec_k > 0:
+                self._spec_unread[i] = r
             hot = hot or self.temps[i] > 0
         return DecodeTick(pos, kv_len, self.base.copy(), table, sample_index,
-                          live_mask, fresh, bool(hot), tuple(emit))
+                          live_mask, fresh, bool(hot), tuple(emit),
+                          n_tok if self.spec_k else None)
 
     def plan_tick(self, *, admit: bool = True,
                   decode: bool = True) -> TickPlan:
@@ -485,3 +521,55 @@ class Scheduler:
         if req.on_token:
             req.on_token(out)
         return out
+
+    def drop(self, emit: Emit) -> None:
+        """Discard a dispatched sample without surfacing it (a rejected
+        speculative suffix position): balances the in-flight accounting
+        that ``ingest`` would otherwise settle."""
+        emit.req._inflight -= 1
+        self._inflight_total -= 1
+
+    @property
+    def spec_acceptance(self) -> float:
+        """Fraction of proposed draft tokens the target accepted."""
+        return self.spec_accepted / max(self.spec_proposed, 1)
+
+    def resolve_spec(self, slot: int, emits: Tuple[Emit, ...],
+                     tokens, n_valid: int) -> List[RequestOutput]:
+        """Settle one slot's multi-token tick: ingest the accepted prefix
+        (``tokens[:n_valid]`` at the first ``n_valid`` emits), drop the
+        rejected suffix, and roll the slot's host state AND paged cache
+        back to the last valid position (``truncate_to`` + re-grow to the
+        admission reservation; the boundary-fork copies it may produce
+        join the next tick's COW dispatch).  A slot that was preempted,
+        cancelled, or finished (stop token inside the valid run) in the
+        meantime only settles attribution — its pages are no longer ours
+        to rewind.  Rollback re-growth that loses the page-pressure race
+        preempts the request (it resumes via re-prefill, token-exact)."""
+        req = emits[0].req
+        n_tok = len(emits)
+        if self._spec_unread.get(slot) is req:
+            del self._spec_unread[slot]
+        if n_tok > 1:
+            self.spec_proposed += n_tok - 1
+            self.spec_accepted += n_valid - 1
+        events: List[RequestOutput] = []
+        for j, e in enumerate(emits):
+            if j < n_valid:
+                out = self.ingest(e, int(tokens[j]))
+                if out is not None:
+                    events.append(out)
+            else:
+                self.drop(e)
+        excess = n_tok - n_valid
+        if excess > 0 and self.active[slot] is req:
+            self.dispatched[slot] -= excess
+            self.pos[slot] -= excess
+            try:
+                forks = self.kv.truncate_to(slot, int(self.pos[slot]))
+                self.kv.reserve(
+                    slot, len(req.prompt) + req.sampling.max_new)
+                self._pending_forks.extend(forks)
+            except MemoryError:
+                self._preempt(slot)
+        return events

@@ -139,6 +139,11 @@ def test_gateway_healthz_metrics_and_validation():
         assert metrics["engine"]["ticks"] > 0
         assert metrics["engine"]["preemptions"] == 0
         assert metrics["engine"]["pool_pages"] > 0
+        # speculative-decode counters are always surfaced (0 with the
+        # plain loop; nonzero acceptance books when spec_k > 0)
+        assert metrics["engine"]["spec_proposed"] == 0
+        assert metrics["engine"]["spec_accepted"] == 0
+        assert metrics["engine"]["spec_acceptance"] == 0.0
     finally:
         handle.stop()
 

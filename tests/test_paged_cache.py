@@ -454,3 +454,134 @@ def test_paged_engine_oversized_request_raises():
     eng.submit(Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=30), rid=0))
     with pytest.raises(MemoryError):
         eng.run()
+
+
+# ---------------------------------------------------------------------------
+# truncate_to (speculative-decode rollback)
+
+
+def test_truncate_across_page_boundary_releases_pages():
+    """Rolling a slot back across a page boundary releases the pages
+    wholly beyond the keep point (reusable immediately, LIFO order) and
+    trashes their table entries; the kept prefix is untouched."""
+    kv = PagedKVCache(n_pages=12, page_size=8, max_batch=2,
+                      max_pages_per_seq=6, retain_prefixes=False)
+    total = kv.free_pages
+    kv.reserve(0, 40)  # 5 pages
+    owned = kv.owned(0)
+    assert len(owned) == 5
+    forks = kv.truncate_to(0, 19)  # keep 3 pages, boundary row 3
+    assert forks == []  # private boundary page: nothing to fork
+    assert kv.owned(0) == owned[:3]
+    assert list(kv.table[0, :3]) == owned[:3]
+    assert (kv.table[0, 3:] == TRASH_PAGE).all()
+    assert kv.free_pages == total - 3
+    # regrow after rollback: the released pages come straight back in
+    # their original order (allocator LIFO), so the slot looks exactly
+    # as it did before the speculative overshoot
+    kv.reserve(0, 40)
+    assert kv.owned(0) == owned
+
+
+def test_truncate_into_cow_shared_page_forks_never_writes():
+    """Truncating INTO a COW-aliased prefix page must fork it: the slot
+    gets a private copy (returned as a copy job) and the shared original
+    — still another slot's live KV — is never written or remapped."""
+    kv = PagedKVCache(n_pages=8, page_size=8, max_batch=2,
+                      max_pages_per_seq=4, retain_prefixes=False)
+    prompt = list(range(16))  # exactly 2 full pages
+    kv.reserve(0, 16)
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    pages0 = kv.owned(0)
+    m = kv.match_prefix(prompt + [7, 7, 7])
+    assert m.matched == 16 and list(m.shared) == pages0
+    kv.reserve_shared(1, m, 24)  # 2 aliased pages + 1 private
+    shared_pg = kv.owned(1)[1]
+    assert shared_pg == pages0[1] and kv.page_refs[shared_pg] == 2
+    forks = kv.truncate_to(1, 12)  # cut into the SECOND shared page
+    assert len(forks) == 1
+    src, dst = forks[0]
+    assert src == shared_pg and dst != src
+    assert kv.owned(1) == [pages0[0], dst]
+    assert kv.table[1, 1] == dst and kv.table[1, 2] == TRASH_PAGE
+    # the original is still slot 0's private page, registry intact
+    assert kv.page_refs[src] == 1 and kv.page_refs[dst] == 1
+    assert kv.owned(0) == pages0
+    m2 = kv.match_prefix(prompt + [9])
+    assert m2.matched == 16 and list(m2.shared) == pages0
+    # double-truncate idempotence: the boundary page is private now, so
+    # truncating to the same length again is a pure no-op
+    table = kv.table.copy()
+    assert kv.truncate_to(1, 12) == []
+    assert (kv.table == table).all()
+    assert kv.owned(1) == [pages0[0], dst]
+
+
+def test_truncate_into_shared_page_refuses_when_pool_exhausted():
+    """When no page can back the boundary fork, truncate_to must refuse
+    (MemoryError) rather than hand the slot a shared page to write."""
+    kv = PagedKVCache(n_pages=3, page_size=8, max_batch=2,
+                      max_pages_per_seq=2)
+    prompt = list(range(16))
+    kv.reserve(0, 16)  # both usable pages
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    m = kv.match_prefix(prompt + [0])
+    assert m.matched == 16
+    kv.reserve_shared(1, m, 16)  # aliases both pages, pool now empty
+    before = kv.owned(1)
+    with pytest.raises(MemoryError):
+        kv.truncate_to(1, 12)
+    # refusal left the mapping intact and the page still safely shared
+    assert kv.owned(1) == before
+    assert kv.page_refs[before[1]] == 2
+
+
+def test_truncate_retained_prefix_sharer_updates_registry():
+    """Truncating the sharer of a registered prefix: pages it releases
+    that are still registered go back to the RETAINED pool (matchable
+    later), while registry claims over boundary-page rows the slot is
+    about to rewrite are dropped so hash matching stays sound."""
+    kv = PagedKVCache(n_pages=10, page_size=8, max_batch=2,
+                      max_pages_per_seq=5)  # retain_prefixes=True
+    prompt = list(range(24))  # 3 full pages
+    kv.reserve(0, 24)
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    a, b_, c = kv.owned(0)
+    free0 = len(kv._free)
+    forks = kv.truncate_to(0, 10)  # keep page a + rows 0-1 of page b_
+    assert forks == []  # sole owner: no fork needed
+    assert kv.owned(0) == [a, b_]
+    # page c was registered + materialized -> retained, NOT freed
+    assert kv.retained_pages == 1 and len(kv._free) == free0
+    # the full-page chain claim on b_ is stale (rows 2+ will be
+    # rewritten): a fresh prompt now matches only the first page
+    m = kv.match_prefix(prompt + [99])
+    assert m.matched == 8 and list(m.shared) == [a]
+    # ... and the surviving first-page entry is genuinely attachable
+    kv.reserve_shared(1, m, 12)
+    assert kv.owned(1)[0] == a and kv.page_refs[a] == 2
+
+
+def test_truncate_validates_and_truncate_to_zero_releases_all():
+    kv = PagedKVCache(n_pages=10, page_size=8, max_batch=1,
+                      max_pages_per_seq=5, retain_prefixes=False)
+    kv.reserve(0, 30)
+    with pytest.raises(ValueError):
+        kv.truncate_to(0, -1)
+    with pytest.raises(ValueError):
+        kv.truncate_to(3, 0)  # unknown slot
+    snap = kv.owned(0)
+    assert kv.truncate_to(0, 13) == []
+    assert kv.owned(0) == snap[:2]
+    # idempotent: same length again changes nothing
+    table = kv.table.copy()
+    assert kv.truncate_to(0, 13) == []
+    assert (kv.table == table).all() and kv.owned(0) == snap[:2]
+    # truncate to zero = full rollback; every page is reusable again
+    assert kv.truncate_to(0, 0) == []
+    assert kv.owned(0) == []
+    assert (kv.table[0] == TRASH_PAGE).all()
+    assert kv.free_pages == kv.n_pages - 1

@@ -1,0 +1,274 @@
+"""Self-speculative decoding: unit semantics of the draft/verify pieces
+(accept-prefix rule, drafter config, exact ``k_scale`` repair/rollback)
+plus engine-level token-for-token identity — ``spec_k > 0`` must emit
+EXACTLY the plain decode loop's tokens for dense, camformer, and mixed
+target stacks, in sync and overlapped mode, under preemption and COW
+prefix sharing, greedy and keyed-sampled alike."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving.engine import Request, SamplingParams, ServeEngine
+from repro.serving.request import RequestState
+from repro.serving.speculate import (accept_prefix, draft_config,
+                                     repair_k_scale, select_k_scale)
+
+
+def _cfg(backend=None, **kw):
+    cfg = smoke_config("codeqwen1.5-7b")
+    if backend == "mixed":
+        return cfg.replace(layer_backends=("dense", "camformer"), **kw)
+    if backend is not None:
+        kw["attn_backend"] = backend
+    return cfg.replace(**kw)
+
+
+# ---------------------------------------------------------------------------
+# unit: accept-prefix rule
+
+
+def test_accept_prefix_semantics():
+    # columns: [prev_token, d1, d2, d3]; samples are the target's draws
+    drafts = jnp.asarray([
+        [7, 10, 11, 12],   # all drafts match -> 3 accepted + bonus
+        [7, 10, 99, 12],   # d2 mismatches -> 1 accepted + bonus
+        [7, 99, 11, 12],   # d1 mismatches -> bonus only
+        [7, 10, 99, 12],   # d3 would match but d2 broke the prefix
+        [7, 10, 11, 12],   # n_tok=2: only d1 is a real proposal
+        [0, 0, 0, 0],      # inert row
+    ], jnp.int32)
+    samples = jnp.asarray([
+        [10, 11, 12, 13],
+        [10, 11, 12, 13],
+        [10, 11, 12, 13],
+        [10, 11, 99, 13],
+        [10, 11, 12, 13],
+        [0, 0, 0, 0],
+    ], jnp.int32)
+    n_tok = jnp.asarray([4, 4, 4, 4, 2, 0], jnp.int32)
+    got = accept_prefix(drafts, samples, n_tok)
+    assert list(np.asarray(got)) == [4, 2, 1, 2, 2, 0]
+
+
+def test_accept_prefix_single_column_is_plain_decode():
+    # m == 1: no proposals at all — every live row emits exactly the one
+    # sample (n_valid 1), inert rows 0
+    drafts = jnp.asarray([[5], [6]], jnp.int32)
+    samples = jnp.asarray([[9], [9]], jnp.int32)
+    got = accept_prefix(drafts, samples, jnp.asarray([1, 0], jnp.int32))
+    assert list(np.asarray(got)) == [1, 0]
+
+
+def test_draft_config_forces_uniform_spec_backend():
+    cfg = _cfg("mixed", spec_k=3)
+    dcfg = draft_config(cfg)
+    assert dcfg.layer_backends is None
+    assert dcfg.attn_backend == "binary"
+    assert set(dcfg.backend_names) == {"binary"}
+    # the drafter realization follows spec_backend, not a hardcoded name
+    assert draft_config(cfg.replace(spec_backend="camformer")).backend == \
+        "camformer"
+
+
+# ---------------------------------------------------------------------------
+# unit: exact k_scale repair / rollback
+
+
+def _seq_scale(s0, n0, means, upto):
+    """The running mean a sequential decode loop would hold after
+    accepting ``upto`` of the chunk's keys."""
+    return (s0 * n0 + means[..., :upto].sum(-1)) / (n0 + upto)
+
+
+@pytest.mark.parametrize("stacked", [False, True])
+def test_repair_k_scale_reconstructs_sequential_mean(stacked):
+    rng = np.random.default_rng(0)
+    b, h, m, layers = 4, 2, 3, 2
+    shape = (layers, b, h) if stacked else (b, h)
+    s0 = jnp.asarray(rng.uniform(0.5, 2.0, shape), jnp.float32)
+    means = jnp.asarray(rng.uniform(0.5, 2.0, shape + (m,)), jnp.float32)
+    pos = jnp.asarray([10, 10, 10, 0], jnp.int32)
+    base = jnp.asarray([0, 4, 0, 0], jnp.int32)
+    n_tok = jnp.asarray([3, 3, 3, 0], jnp.int32)
+    n_valid = jnp.asarray([2, 1, 3, 0], jnp.int32)
+    n0 = (pos - base).astype(jnp.float32)
+    if stacked:
+        n0 = n0[None, :, None]
+        kept_view = lambda v: v[None, :, None]
+    else:
+        n0 = n0[:, None]
+        kept_view = lambda v: v[:, None]
+    # the post-verify scale merges ALL n_tok chunk keys (inert row: s0)
+    vm = means * (jnp.arange(m) < kept_view(n_tok)[..., None])
+    nt = kept_view(n_tok).astype(jnp.float32)
+    s1 = jnp.where(nt > 0,
+                   (s0 * n0 + vm.sum(-1)) / jnp.maximum(n0 + nt, 1.0), s0)
+    new = {"k_scale": s1, "k_means": vm, "other": jnp.zeros(())}
+    old = {"k_scale": s0}
+    out = repair_k_scale(new, old, pos, base, n_tok, n_valid)
+    # rows that rejected a suffix land on the EXACT sequential value ...
+    for row, v in enumerate(np.asarray(n_valid)):
+        want = (_seq_scale(s0, n0, means, int(v))[..., row, :]
+                if int(np.asarray(n_tok)[row]) > int(v)
+                else s1[..., row, :])
+        np.testing.assert_allclose(np.asarray(out["k_scale"])[..., row, :],
+                                   np.asarray(want), rtol=1e-6)
+    # ... and nothing-rejected / inert rows keep the post-verify value
+    # BIT-exactly (jnp.where select, no recomputation)
+    assert (np.asarray(out["k_scale"])[..., 2, :]
+            == np.asarray(s1)[..., 2, :]).all()
+    assert (np.asarray(out["k_scale"])[..., 3, :]
+            == np.asarray(s0)[..., 3, :]).all()
+    assert out["other"] is new["other"]  # untouched leaves pass through
+    # per-layer tuple trees (unscanned stacks) take the same path
+    t = repair_k_scale((new,), (old,), pos, base, n_tok, n_valid)
+    assert (np.asarray(t[0]["k_scale"]) == np.asarray(out["k_scale"])).all()
+    # layers without a running scale (dense) pass through untouched
+    assert repair_k_scale(({"v": s0},), ({"v": s0},), pos, base, n_tok,
+                          n_valid)[0]["v"] is s0
+
+
+def test_select_k_scale_picks_last_accepted_snapshot():
+    b, h = 3, 2
+    snaps = [jnp.full((b, h), float(j), jnp.float32) for j in range(3)]
+    final = {"k_scale": snaps[-1], "pages": jnp.zeros((4,))}
+    n_valid = jnp.asarray([3, 1, 0], jnp.int32)
+    out = select_k_scale(final, snaps, n_valid)
+    # tuple-tree form (snapshot entries are per-layer tuples) agrees
+    out_t = select_k_scale((final,), [(s,) for s in snaps], n_valid)[0]
+    assert (np.asarray(out_t["k_scale"])
+            == np.asarray(out["k_scale"])).all()
+    got = np.asarray(out["k_scale"])
+    assert (got[0] == 2.0).all()  # fully accepted: last step's scale
+    assert (got[1] == 0.0).all()  # one token: first step's scale
+    assert (got[2] == 0.0).all()  # inert: snapshot 0 == untouched value
+    assert out["pages"] is final["pages"]
+
+
+# ---------------------------------------------------------------------------
+# engine: token-for-token identity vs the plain decode loop
+
+
+def _generate(md, cfg, params, *, spec_k, mode="sync", prompts, new,
+              temp=0.0, top_k=0, **eng_kw):
+    eng = ServeEngine(md, cfg, params, max_len=64, page_size=8,
+                      mode=mode, spec_k=spec_k, **eng_kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(prompt=list(p), rid=i,
+                           sampling=SamplingParams(max_new=new,
+                                                   temperature=temp,
+                                                   top_k=top_k)))
+    done = eng.run()
+    return {r.rid: r.tokens for r in done}, eng
+
+
+PROMPTS = [[5, 9, 2], [7, 7, 1, 3, 8, 2, 4], [11, 4, 1, 2, 3]]
+
+
+def test_spec_greedy_identity_camformer_sync_and_counters():
+    """spec_k > 0 with a greedy camformer target emits exactly the plain
+    loop's tokens, and the acceptance counters are coherent."""
+    cfg = _cfg("camformer")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    plain, p_eng = _generate(md, cfg, params, spec_k=0, prompts=PROMPTS,
+                             new=6, max_batch=3)
+    spec, s_eng = _generate(md, cfg, params, spec_k=2, prompts=PROMPTS,
+                            new=6, max_batch=3)
+    assert spec == plain
+    # speculation actually ran, and the books are coherent
+    assert s_eng.spec_proposed > 0
+    assert 0 <= s_eng.spec_accepted <= s_eng.spec_proposed
+    assert 0.0 <= s_eng.spec_acceptance <= 1.0
+    assert s_eng.spec_acceptance == (s_eng.spec_accepted
+                                     / s_eng.spec_proposed)
+    # binary drafting its own target accepts nearly everything — if this
+    # drops, draft/verify have diverged even though rejection hides it
+    assert p_eng.spec_proposed == 0 and p_eng.spec_acceptance == 0.0
+    assert s_eng.kv.free_pages == s_eng.kv.n_pages - 1  # all rolled back
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sync", "overlap"])
+@pytest.mark.parametrize("backend", ["dense", "camformer", "mixed"])
+def test_spec_greedy_identity_matrix(backend, mode):
+    """The full target matrix: binary drafts, target verifies — greedy
+    outputs are identical to spec_k=0 for every stack, both loop modes."""
+    cfg = _cfg(backend)
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    plain, _ = _generate(md, cfg, params, spec_k=0, mode=mode,
+                         prompts=PROMPTS, new=6, max_batch=3)
+    spec, _ = _generate(md, cfg, params, spec_k=3, mode=mode,
+                        prompts=PROMPTS, new=6, max_batch=3)
+    assert spec == plain
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mode", ["sync", "overlap"])
+def test_spec_identity_under_preemption_and_prefix_sharing(mode):
+    """Speculation composes with the hard serving paths: page-pressure
+    preemption (rollback + recompute resume) and COW prefix sharing
+    (slot 3 admitted late against slot 0's registered pages) leave
+    greedy outputs token-for-token equal to the plain loop."""
+    cfg = _cfg("camformer")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    common = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3]  # > one shared page
+    prompts = [common + [11], common + [12], [8, 8, 8]]
+
+    def gen(spec_k):
+        eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64,
+                          page_size=8, n_pages=9, mode=mode,
+                          spec_k=spec_k)
+        lo = Request(prompt=prompts[0], rid=0, priority=0,
+                     sampling=SamplingParams(max_new=14))
+        eng.submit(lo)
+        eng.step()
+        eng.step()
+        hi = Request(prompt=prompts[1], rid=1, priority=5,
+                     sampling=SamplingParams(max_new=14))
+        eng.submit(hi)
+        eng.submit(Request(prompt=prompts[2], rid=2, priority=0,
+                           sampling=SamplingParams(max_new=8)))
+        done = eng.run()
+        assert {r.rid for r in done} == {0, 1, 2}
+        assert lo.state is RequestState.FINISHED
+        # drained: every page reclaimable (retained prefixes count —
+        # free_pages includes the LRU-retained pool)
+        assert eng.kv.free_pages == eng.kv.n_pages - 1
+        return {r.rid: r.tokens for r in done}
+
+    assert gen(2) == gen(0)
+
+
+@pytest.mark.slow
+def test_spec_keyed_sampling_identity():
+    """Keyed-sample-match acceptance is exact at ANY temperature: the
+    emitted tokens are the target's own keyed draws, so a hot-sampled
+    speculative run reproduces the plain loop's stream bit-for-bit."""
+    cfg = _cfg("binary")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    kw = dict(prompts=PROMPTS, new=8, temp=0.9, top_k=40, max_batch=3,
+              seed=7)
+    plain, _ = _generate(md, cfg, params, spec_k=0, **kw)
+    spec, s_eng = _generate(md, cfg, params, spec_k=2, **kw)
+    assert spec == plain
+    assert s_eng.spec_proposed > 0
+
+
+def test_spec_disabled_engine_is_plain():
+    cfg = _cfg("camformer")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                      page_size=8, spec_k=0)
+    assert eng.spec_k == 0 and eng.draft_caches is None
+    with pytest.raises(ValueError):
+        ServeEngine(md, cfg, params, spec_k=-1)
