@@ -35,11 +35,18 @@ tokens/s on the binary target (its acceptance is structural — drafter
 == target stack); dense/camformer smoke weights are random, so their
 lanes have no draft signal to track and are record-only.
 
+With ``--tp 1,2,...`` a tensor-parallel scaling lane rides along: the
+same engine run with head-sharded page pools at each degree (one
+shard_map-fused tick over a tp-axis device mesh — serving/sharded.py),
+reporting ticks/s and per-device KV bytes read/token; on CPU set
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (degrees beyond
+the device count are recorded as skipped, never fail the run).
+
 Standalone:
 
     PYTHONPATH=src:. python benchmarks/paged_decode.py \
         [--backend dense,camformer] [--max-batch 4] [--max-new 8] \
-        [--spec-k 4] [--smoke] [--json BENCH.json]
+        [--spec-k 4] [--tp 1,2] [--smoke] [--json BENCH.json]
 """
 
 import argparse
@@ -240,11 +247,50 @@ def bench_prefix_sharing(backend="dense", *, n_requests=6, prefix_len=32,
     }
 
 
-def collect(backends, *, max_batch=4, max_new=8, spec_k=0):
+def bench_tp(backend: str, *, tps, max_batch=4, max_new=8, page_size=16,
+             max_len=64, repeats=2):
+    """Tensor-parallel scaling lane: the same engine (sync loop, fused
+    impl) run at each ``--tp`` degree over head-sharded page pools
+    (serving/sharded.py).  Reports ticks/s plus the per-device KV bytes
+    READ per decode token — the memory-partition win: every device walks
+    the same live pages but only its 1/tp kv-head slice of each, so the
+    per-device read traffic divides by tp while the token stream stays
+    bit-identical (the identity matrix in tests/test_sharded.py)."""
+    prompts = [[3 + i, 5, 8, 1] for i in range(max_batch)]
+    from repro.models.transformer import dtype_of
+
+    row = {"backend": backend, "lanes": {}}
+    for tp in tps:
+        if tp > jax.device_count():
+            row["lanes"][str(tp)] = {
+                "skipped": f"needs {tp} devices, have {jax.device_count()} "
+                           "(set XLA_FLAGS="
+                           f"--xla_force_host_platform_device_count={tp})"}
+            continue
+        cfg, eng = _engine(backend, max_batch=max_batch, max_len=max_len,
+                           page_size=page_size, mode="sync", tp=tp)
+        _timed_run(eng, prompts, max_new)  # warm-up: compile the step
+        best = 0.0
+        for _ in range(repeats):
+            wall, ticks, _, _ = _timed_run(eng, prompts, max_new)
+            best = max(best, ticks / max(wall, 1e-9))
+        bk = get_backend(backend)
+        io = bk.paged_io_stats(
+            cfg, dtype_of(cfg), kv_len=len(prompts[0]) + max_new,
+            page_size=page_size, n_table_pages=eng.kv.max_pages_per_seq)
+        row["lanes"][str(tp)] = {
+            "ticks_per_s": best,
+            "kv_read_bytes_per_token_per_device":
+                io["fused_read_bytes"] * cfg.n_layers / tp,
+        }
+    return row
+
+
+def collect(backends, *, max_batch=4, max_new=8, spec_k=0, tps=(1,)):
     """One metrics payload covering every report — the single collection
     path shared by run() (run.py harness) and main() (standalone CLI)."""
     payload = {"backends": {}, "continuous": {}, "sharing": {},
-               "speculative": {}}
+               "speculative": {}, "tp": {}}
     for b in backends:
         payload["backends"][b] = bench_backend(
             b, max_batch=max_batch, max_new=max_new)
@@ -252,6 +298,9 @@ def collect(backends, *, max_batch=4, max_new=8, spec_k=0):
         if spec_k:
             payload["speculative"][b] = bench_spec(
                 b, spec_k=spec_k, max_batch=max_batch, max_new=max_new)
+        if tuple(tps) != (1,):
+            payload["tp"][b] = bench_tp(
+                b, tps=tps, max_batch=max_batch, max_new=max_new)
     payload["sharing"][backends[0]] = bench_prefix_sharing(backends[0])
     return payload
 
@@ -341,6 +390,24 @@ def run(csv_rows, *, max_batch=4, max_new=8, backends=("dense", "camformer"),
                          sp["spec"]["tokens_per_tick"],
                          "multi-token tick amplification"))
 
+    for b, r in payload.get("tp", {}).items():
+        print(f"\n== tensor-parallel sharded serving ({b}): head-sharded "
+              f"page pools, one shard_map tick ==")
+        print(f"  {'tp':>4s} {'ticks/s':>9s} {'KV rd B/tok/dev':>16s}")
+        for tp, m in sorted(r["lanes"].items(), key=lambda kv: int(kv[0])):
+            if "skipped" in m:
+                print(f"  {tp:>4s} skipped: {m['skipped']}")
+                continue
+            print(f"  {tp:>4s} {m['ticks_per_s']:9.1f} "
+                  f"{m['kv_read_bytes_per_token_per_device']:16.0f}")
+            csv_rows.append(
+                (f"paged_decode_ticks_per_s_{b}_tp{tp}",
+                 m["ticks_per_s"], f"tp={tp} head-sharded, sync loop"))
+            csv_rows.append(
+                (f"paged_kv_read_bytes_per_token_per_device_{b}_tp{tp}",
+                 m["kv_read_bytes_per_token_per_device"],
+                 f"fused decode reads / device at tp={tp}"))
+
     share = payload["sharing"][backends[0]]
     print(f"\n== COW prefix sharing ({share['backend']}): "
           f"{share['n_requests']} requests, {share['prefix_len']}-token "
@@ -367,6 +434,12 @@ def main():
     ap.add_argument("--spec-k", type=int, default=0,
                     help="also bench self-speculative decoding with this "
                          "many binary-stack drafts per tick (0 = skip)")
+    ap.add_argument("--tp", default="1",
+                    help="comma-separated tensor-parallel sweep (e.g. "
+                         "'1,2'): per-degree ticks/s + per-device KV "
+                         "bytes read/token over head-sharded page pools "
+                         "(degrees beyond the device count are recorded "
+                         "as skipped; '1' alone = no sweep)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run; asserts overlapped >= sync ticks/s "
                          "and (with --spec-k) spec >= plain tokens/s")
@@ -375,9 +448,10 @@ def main():
     args = ap.parse_args()
     backends = tuple(args.backend.split(","))
     max_new = 6 if args.smoke else args.max_new
+    tps = tuple(int(x) for x in args.tp.split(","))
 
     payload = collect(backends, max_batch=args.max_batch, max_new=max_new,
-                      spec_k=args.spec_k)
+                      spec_k=args.spec_k, tps=tps)
     if args.smoke and args.spec_k and "binary" not in payload["speculative"]:
         # the gated lane: binary drafts == the binary target by
         # construction, so its acceptance (and the multi-token win) is

@@ -68,21 +68,27 @@ REQUIRED_KEYS = (
 )
 
 
+def engine_kwargs(args) -> dict:
+    """ALL ServeEngine kwargs the drivers forward, as ONE dict — new
+    engine knobs (``tp``, ``spec_k``, ...) ride uniformly instead of
+    growing positionally at every call site."""
+    return {
+        "max_batch": args.max_batch,
+        "max_len": args.max_len,
+        "page_size": args.page_size,
+        "n_pages": args.n_pages,
+        "mode": args.mode,
+        "prefill_slice": args.page_size,  # one fixed-size prefill chunk/jit
+        "tp": args.tp,
+        "spec_k": args.spec_k,
+    }
+
+
 def build_engine(args) -> ServeEngine:
     cfg = smoke_config(args.arch).replace(attn_backend=args.backend)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
-    return ServeEngine(
-        md,
-        cfg,
-        params,
-        max_batch=args.max_batch,
-        max_len=args.max_len,
-        page_size=args.page_size,
-        n_pages=args.n_pages,
-        mode=args.mode,
-        prefill_slice=args.page_size,  # one fixed-size prefill chunk/jit
-    )
+    return ServeEngine(md, cfg, params, **engine_kwargs(args))
 
 
 def _shared_prompt(args):
@@ -146,6 +152,7 @@ def _server_view(engine, metrics) -> dict:
             "blocked_s": engine.blocked_s,
             "peak_pages": engine.peak_pages,
             "pool_pages": engine.kv.n_pages - 1,
+            "tp": engine.tp,
         },
     }
 
@@ -260,7 +267,14 @@ async def _drive_url(args, workload, host, port):
         "prefix_hit_rate": metrics["requests"]["prefix_hit_rate"],
         "engine": {
             k: metrics["engine"].get(k)
-            for k in ("ticks", "readbacks", "blocked_s", "peak_pages", "pool_pages")
+            for k in (
+                "ticks",
+                "readbacks",
+                "blocked_s",
+                "peak_pages",
+                "pool_pages",
+                "tp",
+            )
         },
     }
     return list(records), wall, view
@@ -410,6 +424,19 @@ def main():
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=None)
     ap.add_argument("--mode", default="overlap", choices=("overlap", "sync"))
+    ap.add_argument(
+        "--tp",
+        type=int,
+        default=1,
+        help="tensor-parallel degree (head-sharded page pools; needs "
+        "tp devices, e.g. XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument(
+        "--spec-k",
+        type=int,
+        default=None,
+        help="self-speculative drafts per tick (None = config default)",
+    )
     ap.add_argument("--temperature", type=float, default=0.7)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--slo-ttft-ms", type=float, default=2500.0)

@@ -52,6 +52,7 @@ def build_engine(args) -> ServeEngine:
         paged_impl=args.paged_impl,
         spec_k=args.spec_k,
         spec_backend=args.spec_backend,
+        tp=args.tp,
     )
 
 
@@ -85,6 +86,14 @@ def main() -> None:
     )
     ap.add_argument("--spec-backend", default=None,
                     help="drafter attention backend (default 'binary')")
+    ap.add_argument(
+        "--tp",
+        type=int,
+        default=1,
+        help="tensor-parallel degree: head-shard the page pools over a "
+        "tp-axis device mesh (launch/mesh.py make_tp_mesh); 1 = the "
+        "single-device engine, same code path",
+    )
     args = ap.parse_args()
 
     engine = build_engine(args)
@@ -93,10 +102,11 @@ def main() -> None:
     async def serve() -> None:
         gw = Gateway(engine, host=args.host, port=args.port)
         await gw.start()
+        shard = f", head-sharded tp={engine.tp}" if engine.tp > 1 else ""
         print(
             f"gateway [{layout}] listening on http://{args.host}:{gw.port} "
             f"(pool {engine.kv.n_pages - 1} pages x {engine.kv.page_size} "
-            f"tokens, {args.mode} loop)"
+            f"tokens, {args.mode} loop{shard})"
         )
         try:
             await gw.serve_forever()

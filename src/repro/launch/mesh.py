@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from repro.utils import compat
 
-__all__ = ["make_production_mesh", "make_mesh_for"]
+__all__ = ["make_production_mesh", "make_mesh_for", "make_tp_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -21,3 +21,13 @@ def make_mesh_for(devices: int, model_parallel: int = 1, axes=("data", "model"))
     assert devices % model_parallel == 0
     return compat.make_mesh((devices // model_parallel, model_parallel), axes,
                             axis_types=compat.axis_type_auto(len(axes)))
+
+
+def make_tp_mesh(tp: int):
+    """One-axis ``("tp",)`` mesh for tensor-parallel sharded serving
+    (serving/sharded.py).  The axis name is deliberately NOT "model":
+    the logical-axis sharding rules and ``constrain()`` only react to
+    pod/data/model, so the existing mesh machinery stays inert and the
+    serving step's sharding is governed solely by its shard_map specs."""
+    return compat.make_mesh((tp,), ("tp",),
+                            axis_types=compat.axis_type_auto(1))

@@ -69,6 +69,13 @@ def main():
                          "(0 = off, token-for-token plain decode)")
     ap.add_argument("--spec-backend", default=None,
                     help="drafter attention backend (default 'binary')")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree: head-shard every page "
+                         "pool over a tp-axis device mesh "
+                         "(launch/mesh.py make_tp_mesh) and run the "
+                         "fused tick shard_map-wide; 1 (default) is the "
+                         "single-device engine, same code path, and any "
+                         "degree is token-for-token identical to it")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress per-token output, print only summaries")
     args = ap.parse_args()
@@ -84,11 +91,14 @@ def main():
                       n_pages=args.n_pages, mode=args.mode,
                       prefill_slice=args.prefill_slice,
                       paged_impl=args.paged_impl,
-                      spec_k=args.spec_k, spec_backend=args.spec_backend)
+                      spec_k=args.spec_k, spec_backend=args.spec_backend,
+                      tp=args.tp)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
+    shard = (f", head-sharded tp={eng.tp} over {jax.device_count()} devices"
+             if eng.tp > 1 else "")
     print(f"paged KV cache [{layout}]: {eng.kv.n_pages} pages x "
           f"{eng.kv.page_size} tokens "
-          f"(page table {eng.kv.table.shape})")
+          f"(page table {eng.kv.table.shape}{shard})")
     sampling = SamplingParams(
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
         max_new=args.max_new)

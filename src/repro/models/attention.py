@@ -123,6 +123,39 @@ def _attn_strategy(cfg, training: bool = True) -> str:
     return "kv_seq" if training else "q_seq"
 
 
+def _tp_paged_decode(bk, q, cache, k, v, positions, page_table, kv_len,
+                     cfg, scale_base):
+    """Paged attention over a head-sharded pool slice (the tensor-parallel
+    serving seam — see serving/sharded.py for the subsystem design).
+
+    Runs inside the sharded engine's ``shard_map`` body: every pool leaf
+    carries only this device's kv-head slice (detected by comparing the
+    pool's head extent against ``cfg.n_kv_heads``), while q/k/v from the
+    replicated projections carry all heads.  Slice q/k/v to the local
+    contiguous head range (q heads are grouped per kv head, so kv heads
+    ``[i*hl, (i+1)*hl)`` own q heads ``[i*g*hl, (i+1)*g*hl)``), run the
+    backend's paged write+attend unchanged on the slice (all paged
+    attention code derives head counts from array shapes), and
+    reassemble the per-head outputs with an ``all_gather`` over ``tp``.
+    The gather is pure concatenation — no arithmetic — so the block
+    output, and every downstream logit and keyed sample, stays
+    bit-identical to the single-device engine at any tp degree; a psum
+    of partial ``wo`` projections would reorder floating-point sums and
+    break token-for-token identity.
+    """
+    hl = cache["v_pages"].shape[1]  # kv heads local to this device
+    g = cfg.n_heads // cfg.n_kv_heads
+    i = jax.lax.axis_index("tp")
+    q = jax.lax.dynamic_slice_in_dim(q, i * g * hl, g * hl, axis=1)
+    k = jax.lax.dynamic_slice_in_dim(k, i * hl, hl, axis=1)
+    v = jax.lax.dynamic_slice_in_dim(v, i * hl, hl, axis=1)
+    out, new_cache = bk.paged_decode(
+        q, cache, k, v, positions, page_table, kv_len, cfg,
+        base=scale_base)
+    out = jax.lax.all_gather(out, "tp", axis=1, tiled=True)
+    return out, new_cache
+
+
 def attention_block(
     p,
     x: jax.Array,
@@ -175,9 +208,16 @@ def attention_block(
         if page_table is not None and cache is not None:
             if kv_len is None:
                 raise ValueError("paged cache needs page_table and kv_len")
-            out, new_cache = bk.paged_decode(
-                q, cache, k, v, positions, page_table, kv_len, cfg,
-                base=scale_base)
+            if cache["v_pages"].shape[1] != cfg.n_kv_heads:
+                # head-sharded pool slice: inside the tensor-parallel
+                # engine's shard_map body (serving/sharded.py)
+                out, new_cache = _tp_paged_decode(
+                    bk, q, cache, k, v, positions, page_table, kv_len,
+                    cfg, scale_base)
+            else:
+                out, new_cache = bk.paged_decode(
+                    q, cache, k, v, positions, page_table, kv_len, cfg,
+                    base=scale_base)
             out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.q_dim)
             out = constrain(out, ("batch", "seq", "heads"))
             return (out @ p["wo"].astype(dt)), new_cache

@@ -50,10 +50,13 @@ from typing import Iterator, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec
 
+from repro.launch.mesh import make_tp_mesh
 from repro.launch.steps import cast_params
 from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
+from repro.serving import sharded
 from repro.serving import speculate
 from repro.serving.kv_cache import PagedKVCache, pages_for
 from repro.serving.request import (Request, RequestOutput, RequestState,
@@ -112,7 +115,8 @@ class ServeEngine:
                  prefill_slice: Optional[int] = None,
                  paged_impl: Optional[str] = None,
                  spec_k: Optional[int] = None,
-                 spec_backend: Optional[str] = None):
+                 spec_backend: Optional[str] = None,
+                 tp: int = 1):
         if paged_impl is not None:
             # per-engine override of the decode realization: "fused"
             # (Pallas paged flash/CAM kernels, the default) vs "gather"
@@ -134,6 +138,24 @@ class ServeEngine:
                 "decode_paged) required by ServeEngine")
         if mode not in ("sync", "overlap"):
             raise ValueError(f"mode must be 'sync' or 'overlap', got {mode!r}")
+        if tp < 1:
+            raise ValueError(f"tp must be >= 1, got {tp}")
+        self.tp = tp
+        self.mesh = None
+        self._pool_pspecs = self._draft_pspecs = None
+        if tp > 1:
+            # tensor-parallel sharded serving (serving/sharded.py): the
+            # page pools head-shard over a 1-axis tp mesh and every
+            # fused step runs shard_map-wrapped.  tp == 1 takes none of
+            # these branches — it IS today's single-device engine, same
+            # code path (self.mesh stays None; the identity tests assert
+            # both).
+            if jax.device_count() < tp:
+                raise ValueError(
+                    f"tp={tp} needs at least {tp} devices, have "
+                    f"{jax.device_count()} (CPU: set XLA_FLAGS="
+                    f"--xla_force_host_platform_device_count={tp})")
+            self.mesh = make_tp_mesh(tp)
         self.md, self.cfg = md, cfg
         self.params = cast_params(params, dtype_of(cfg))
         self.max_batch, self.max_len = max_batch, max_len
@@ -162,7 +184,12 @@ class ServeEngine:
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
         zeros = lambda t: jnp.zeros(t[0].shape, t[0].dtype)
+        if tp > 1:  # validate head divisibility BEFORE allocating pools
+            self._pool_pspecs = sharded.pool_partition_specs(specs, tp)
         self.caches = jax.tree.map(zeros, specs, is_leaf=is_leaf)
+        if tp > 1:  # one NamedSharding per page_spec leaf
+            self.caches = sharded.shard_pools(self.caches,
+                                              self._pool_pspecs, self.mesh)
         # speculative decoding: the drafter stack (same weights, every
         # layer forced to cfg.spec_backend) keeps its OWN page pools on
         # the SAME page table, so admission / COW forks / rollback are
@@ -177,15 +204,41 @@ class ServeEngine:
             self._draft_cfg = speculate.draft_config(cfg)
             dspecs = md.page_specs(self._draft_cfg, n_pages, page_size,
                                    max_batch)
+            if tp > 1:
+                self._draft_pspecs = sharded.pool_partition_specs(dspecs, tp)
             self.draft_caches = jax.tree.map(zeros, dspecs, is_leaf=is_leaf)
+            if tp > 1:
+                self.draft_caches = sharded.shard_pools(
+                    self.draft_caches, self._draft_pspecs, self.mesh)
         self._prefill_jits = {}  # hot -> jitted fused prefill-chunk step
         self._decode_jits = {}  # hot -> jitted fused decode step
         self._spec_jits = {}  # hot -> jitted fused draft+verify step
-        self._fork = jax.jit(_copy_pool_page)
+        if tp == 1:
+            self._fork = jax.jit(_copy_pool_page)
+            self._fork_draft = self._fork
+        else:
+            # the COW fork copies along the PAGE axis, never the head
+            # axis, so the same body runs on the local pool shards; the
+            # target and drafter trees need separate wraps only because
+            # their spec trees differ (e.g. mixed target, uniform draft)
+            R = PartitionSpec()
+            self._fork = jax.jit(sharded.shard_step(
+                _copy_pool_page, self.mesh, (self._pool_pspecs, R, R),
+                self._pool_pspecs))
+            self._fork_draft = None if self._draft_pspecs is None else (
+                jax.jit(sharded.shard_step(
+                    _copy_pool_page, self.mesh, (self._draft_pspecs, R, R),
+                    self._draft_pspecs)))
         # double-buffered on-device token state: the decode step's input
         # tokens are the previous step's output, never a host round-trip
         self._tok_buf = jnp.zeros((max_batch,), jnp.int32)
         self._zero_tok = jnp.zeros((max_batch,), jnp.int32)
+        if tp > 1:
+            # params and token state are replicated residents of the
+            # mesh; only the page pools shard
+            self.params = sharded.replicate(self.params, self.mesh)
+            self._tok_buf = sharded.replicate(self._tok_buf, self.mesh)
+            self._zero_tok = sharded.replicate(self._zero_tok, self.mesh)
 
         # overlap-mode dispatch-ahead state: the tick whose tokens have
         # been dispatched but not read yet (None in sync mode / idle)
@@ -259,6 +312,25 @@ class ServeEngine:
     # ------------------------------------------------------------------
     # the fused device step (everything per tick inside one jit)
     # ------------------------------------------------------------------
+    def _shardify(self, fn, n_before, n_after, caches_out_prefix=1):
+        """tp > 1: shard_map the fused step over the tp mesh before jit.
+
+        Every step fn takes (``n_before`` replicated args, the target
+        pool tree[, the drafter pool tree], ``n_after`` replicated args)
+        and returns (``caches_out_prefix`` replicated outputs, then the
+        pool tree(s) in the same order).  The pool trees are the ONLY
+        sharded operands — the model compute is replicated per device
+        except the head-sliced paged attention (models/attention.py),
+        whose all_gather restores replication, so replicated out_specs
+        for the sampled tokens are exact.
+        """
+        R = PartitionSpec()
+        pools = ((self._pool_pspecs,) if self._draft_pspecs is None
+                 else (self._pool_pspecs, self._draft_pspecs))
+        in_specs = (R,) * n_before + pools + (R,) * n_after
+        out_specs = (R,) * caches_out_prefix + pools
+        return sharded.shard_step(fn, self.mesh, in_specs, out_specs)
+
     def _prefill_jit(self, hot: bool):
         if hot not in self._prefill_jits:
             md, cfg = self.md, self.cfg
@@ -280,6 +352,9 @@ class ServeEngine:
                         first = S.greedy(logits)
                     return first, caches
 
+            if self.tp > 1:
+                # (params..scale_base | pools | pt..top_ps) -> (first, pools)
+                fn = self._shardify(fn, 5, 6)
             self._prefill_jits[hot] = jax.jit(fn)
         return self._prefill_jits[hot]
 
@@ -287,6 +362,10 @@ class ServeEngine:
         if hot not in self._spec_jits:
             fn = speculate.build_spec_step(
                 self.md, self.cfg, self._draft_cfg, self.spec_k + 1, hot)
+            if self.tp > 1:
+                # (params..n_tok | pools | pt..top_ps)
+                #   -> (packed, tok_buf, pools)
+                fn = self._shardify(fn, 7, 7, caches_out_prefix=2)
             self._spec_jits[hot] = jax.jit(fn)
         return self._spec_jits[hot]
 
@@ -313,6 +392,9 @@ class ServeEngine:
                     nxt = S.greedy(logits)
                 return nxt, caches
 
+            if self.tp > 1:
+                # (params..kv_len | pools | pt..top_ps) -> (nxt, pools)
+                fn = self._shardify(fn, 7, 7)
             self._decode_jits[hot] = jax.jit(fn)
         return self._decode_jits[hot]
 
@@ -322,7 +404,7 @@ class ServeEngine:
             self.caches = self._fork(
                 self.caches, jnp.int32(src), jnp.int32(dst))
             if self.draft_caches is not None:  # drafter aliases the same
-                self.draft_caches = self._fork(  # page ids: fork both
+                self.draft_caches = self._fork_draft(  # page ids: fork both
                     self.draft_caches, jnp.int32(src), jnp.int32(dst))
         keys = jnp.asarray(plan.keys)
         temps = jnp.asarray(plan.temps)

@@ -494,6 +494,11 @@ class Gateway:
             "readbacks": eng.readbacks,
             "blocked_s": eng.blocked_s,
             "peak_pages": eng.peak_pages,
+            # per-device page-pool occupancy (ONE host page table; under
+            # tensor parallelism each device holds all pages at 1/tp of
+            # the head slice — serving/sharded.py)
+            "tp": eng.tp,
+            "page_pool": eng.kv.occupancy(eng.tp),
             "preemptions": eng.preemptions,
             "spec_proposed": eng.spec_proposed,
             "spec_accepted": eng.spec_accepted,

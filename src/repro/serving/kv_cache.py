@@ -161,6 +161,32 @@ class PagedKVCache:
         """Physical pages currently referenced by more than one slot."""
         return int(np.sum(self.page_refs > 1))
 
+    def occupancy(self, tp: int = 1) -> dict:
+        """Page-pool occupancy snapshot, broken out per device for the
+        gateway's ``GET /metrics``.
+
+        There is ONE host page table regardless of the tensor-parallel
+        degree: under head-sharded serving (serving/sharded.py) every
+        device holds ALL pages — each carrying 1/tp of the page's
+        kv-head slice — so per-device page occupancy is the allocator's
+        global view replicated ``tp`` ways.  Reporting it per device id
+        keeps dashboards keyed by device uniform as ``tp`` changes."""
+        pool = self.n_pages - 1  # physical pages minus the trash page
+        used = self.used_pages
+        frac = used / max(pool, 1)
+        return {
+            "tp": tp,
+            "pool_pages": pool,
+            "used_pages": used,
+            "retained_pages": self.retained_pages,
+            "shared_pages": self.shared_pages,
+            "per_device": [
+                {"device": d, "used_pages": used, "pool_pages": pool,
+                 "occupancy": frac}
+                for d in range(tp)
+            ],
+        }
+
     def _avail_for(self, match: "PrefixMatch" = NO_MATCH) -> int:
         """Pages allocatable while attaching `match`: attached shared
         pages leave the retained pool without consuming an allocation,

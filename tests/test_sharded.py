@@ -1,0 +1,241 @@
+"""Tensor-parallel sharded serving (serving/sharded.py): the identity
+matrix and the page-spec sharding contract.
+
+The contract under test: a ``tp > 1`` engine head-shards every page-pool
+leaf over a ``("tp",)`` mesh and runs the whole tick shard_map-fused,
+yet emits TOKEN-FOR-TOKEN identical streams to the single-device engine
+— same events, same tick count, and the sampled ids still the only
+per-tick readback (readbacks counter pinned) — because the per-head
+attention outputs are reassembled by all_gather (pure concatenation, no
+arithmetic) and everything else computes replicated.
+
+Multi-device jax needs the device count fixed before the backend
+initializes, so every identity test runs a small script in a subprocess
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (the main
+pytest process keeps the real single CPU device — see conftest.py).
+The dense lane stays in the CI fast lane (no slow mark; this is the
+fast lane's forced-host-device --tp 2 configuration); the camformer /
+mixed / speculative / preemption matrix is ``slow``.
+
+The spec-derivation unit tests run in-process: they exercise only
+``pool_partition_specs`` (pure shape arithmetic over the
+``page_spec`` logical-axes tuples), no mesh required.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.transformer import lm_page_specs
+from repro.serving import sharded
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def run_script(body: str, devices: int = 2, timeout: int = 600) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", body], env=env,
+                       timeout=timeout, capture_output=True, text=True)
+    assert r.returncode == 0, (
+        f"exit {r.returncode}\nstdout:\n{r.stdout}\nstderr:\n{r.stderr}")
+    return r.stdout
+
+
+# ---------------------------------------------------------------------------
+# spec derivation: every page_spec leaf shards its kv-head axis or raises
+
+
+@pytest.mark.parametrize("backend,spec_k", [
+    ("dense", 0), ("binary", 4), ("camformer", 4)])
+def test_pool_partition_specs_shard_the_head_axis(backend, spec_k):
+    """Every leaf of every backend's page_spec (k_pages/v_pages/kp_pages/
+    k_scale/k_means) gets "tp" exactly on its kv_heads axis, mechanically
+    from the logical-axes tuples — no per-backend case list."""
+    cfg = smoke_config("codeqwen1.5-7b").replace(
+        attn_backend=backend, spec_k=spec_k)
+    specs = lm_page_specs(cfg, n_pages=9, page_size=8, max_batch=2)
+    ps = sharded.pool_partition_specs(specs, tp=2)
+    assert set(ps) == set(specs)
+    for name, (sds, axes) in specs.items():
+        assert "kv_heads" in axes, (name, axes)
+        dim = axes.index("kv_heads")
+        got = tuple(ps[name]) + (None,) * (len(axes) - len(tuple(ps[name])))
+        assert got[dim] == "tp", (name, axes, ps[name])
+        assert all(a is None for i, a in enumerate(got) if i != dim), (
+            name, ps[name])
+
+
+def test_pool_partition_specs_mixed_stack_structure():
+    """Mixed layer_backends policies shard per layer (tuple of per-layer
+    spec dicts mirroring the pool tree)."""
+    cfg = smoke_config("codeqwen1.5-7b").replace(
+        layer_backends=("dense", "camformer"))
+    specs = lm_page_specs(cfg, n_pages=9, page_size=8, max_batch=2)
+    ps = sharded.pool_partition_specs(specs, tp=2)
+    assert isinstance(specs, tuple) and isinstance(ps, tuple)
+    assert len(ps) == len(specs)
+    for layer_specs, layer_ps in zip(specs, ps):
+        assert set(layer_ps) == set(layer_specs)
+
+
+def test_pool_partition_specs_indivisible_head_axis_raises():
+    """tp that does not divide n_kv_heads fails loudly at spec time,
+    naming the offending leaf (smoke config has 4 kv heads)."""
+    cfg = smoke_config("codeqwen1.5-7b").replace(attn_backend="camformer")
+    specs = lm_page_specs(cfg, n_pages=9, page_size=8, max_batch=2)
+    with pytest.raises(ValueError, match=r"kv-head axis.*divide.*tp=3"):
+        sharded.pool_partition_specs(specs, tp=3)
+
+
+def test_engine_tp_validation_and_tp1_code_path():
+    """tp=1 IS today's engine (no mesh, plain jits — the asserted same
+    code path); tp beyond the device count fails with a clear error in
+    the single-device main process."""
+    import jax
+
+    from repro.models import get_model_def
+    from repro.models.module import init_params
+    from repro.serving import ServeEngine
+
+    cfg = smoke_config("codeqwen1.5-7b")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                      page_size=8, tp=1)
+    assert eng.tp == 1 and eng.mesh is None
+    assert eng._pool_pspecs is None  # no shard_map wrapping at tp=1
+    with pytest.raises(ValueError, match="devices"):
+        ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                    page_size=8, tp=jax.device_count() + 1)
+    with pytest.raises(ValueError, match="tp"):
+        ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                    page_size=8, tp=0)
+
+
+# ---------------------------------------------------------------------------
+# the identity matrix: tp>1 == tp=1 token for token, readbacks pinned
+
+
+def identity_script(*, backend=None, layer_backends=None, spec_k=None,
+                    shared=0, tp=2, modes=("sync", "overlap")) -> str:
+    """A subprocess body that runs the same workload at tp=1 and tp=N
+    (each sync and overlap) and asserts identical (rid, index, token)
+    event streams with identical readback and tick counters."""
+    return f"""
+import jax
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import Request, SamplingParams, ServeEngine
+
+cfg = smoke_config("codeqwen1.5-7b")
+kw = {{}}
+if {layer_backends!r}:
+    kw["n_layers"] = max(cfg.n_layers, len({layer_backends!r}))
+cfg = cfg.replace(attn_backend={backend!r},
+                  layer_backends={layer_backends!r}, **kw)
+md = get_model_def(cfg)
+params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+
+def run(tp, mode):
+    eng = ServeEngine(md, cfg, params, max_batch=3, max_len=64,
+                      page_size=8, mode=mode, tp=tp, spec_k={spec_k!r})
+    sp = SamplingParams(temperature=0.8, top_k=8, max_new=5)
+    pre = list(range(1, {shared} + 1))
+    for i in range(4):
+        eng.submit(Request(prompt=pre + [3 + i, 5, 8, 1, 9 + i],
+                           sampling=sp, rid=i))
+    outs = [(o.rid, o.index, o.token) for o in eng.stream()]
+    assert eng.mesh is None if tp == 1 else eng.mesh is not None
+    return outs, eng.readbacks, eng.ticks
+
+for mode in {modes!r}:
+    ref = run(1, mode)
+    got = run({tp}, mode)
+    assert ref[0] == got[0], (mode, ref[0][:6], got[0][:6])
+    assert ref[1:] == got[1:], (mode, ref[1:], got[1:])
+    print(mode, "OK", len(ref[0]), "events,", ref[1], "readbacks")
+"""
+
+
+def test_sharded_identity_dense():
+    """The fast-lane lane of the acceptance matrix: dense, tp=2, sync +
+    overlap, temperature sampling — bit-identical streams, pinned
+    readbacks."""
+    out = run_script(identity_script(backend="dense"), devices=2)
+    assert out.count("OK") == 2, out
+
+
+@pytest.mark.slow
+def test_sharded_identity_camformer_spec_cow():
+    """camformer with spec_k=4 drafts AND a COW shared prefix: the
+    drafter pool tree shards alongside the target's, speculative
+    rollback (truncate_to) and prefix forks run through the same
+    shard_map-wrapped one-jitted-copy paths."""
+    out = run_script(identity_script(backend="camformer", spec_k=4,
+                                     shared=12), devices=2)
+    assert out.count("OK") == 2, out
+
+
+@pytest.mark.slow
+def test_sharded_identity_mixed_stack():
+    """Mixed dense/camformer layer policy: per-layer pool tuples shard
+    leaf-by-leaf and the fused step stays identical."""
+    out = run_script(identity_script(layer_backends=("dense", "camformer"),
+                                     shared=12), devices=2)
+    assert out.count("OK") == 2, out
+
+
+@pytest.mark.slow
+def test_sharded_identity_dense_tp4():
+    """Any tp degree, not just 2 (8-device host, tp=4)."""
+    out = run_script(identity_script(backend="dense", tp=4), devices=8)
+    assert out.count("OK") == 2, out
+
+
+@pytest.mark.slow
+def test_sharded_identity_under_preemption():
+    """Page-pressure preemption (tiny pool, priority submit mid-run):
+    eviction + recompute-resume replans against ONE host page table and
+    stays token-identical on sharded pools.  Mirrors
+    test_overlap.test_preemption_equivalence_across_modes."""
+    body = """
+import jax
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import Request, RequestState, SamplingParams, ServeEngine
+
+cfg = smoke_config("codeqwen1.5-7b")
+md = get_model_def(cfg)
+params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+
+def run(tp):
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32,
+                      page_size=8, n_pages=5, prefix_sharing=False,
+                      mode="sync", tp=tp)
+    lo = Request(prompt=[1, 2, 3, 4, 5, 6],
+                 sampling=SamplingParams(max_new=18), rid=0, priority=0)
+    eng.submit(lo)
+    eng.step()
+    eng.step()
+    assert lo.state is RequestState.DECODING and len(lo.tokens) >= 2
+    hi = Request(prompt=[9, 8, 7, 6, 5, 4],
+                 sampling=SamplingParams(max_new=18), rid=1, priority=5)
+    eng.submit(hi)
+    done = eng.run()  # hi preempts lo, lo resumes via recompute
+    assert eng.preemptions >= 1, eng.preemptions
+    return {r.rid: tuple(r.tokens) for r in done}, eng.preemptions
+
+ref = run(1)
+got = run(2)
+assert ref == got, (ref, got)
+print("OK", ref[1], "preemptions")
+"""
+    out = run_script(body, devices=2)
+    assert "OK" in out, out
