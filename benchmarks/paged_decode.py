@@ -42,11 +42,22 @@ reporting ticks/s and per-device KV bytes read/token; on CPU set
 ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (degrees beyond
 the device count are recorded as skipped, never fail the run).
 
+With ``--prefill-impl fused,gather`` a chunked-prefill impl lane rides
+along: long prompts prefilled in page-sized chunks under each Sq>1
+realization (the fused paged flash-prefill kernel vs the XLA
+page-gather reference), reporting chunk ticks/s and the analytic KV
+bytes read per prefill token; token streams are asserted identical, and
+``--smoke`` gates fused bytes <= gather everywhere plus fused >= gather
+chunk ticks/s on TPU (remeasure-retry).  The ``hybrid`` backend
+(flash-scored fused prefill + CAM paged decode) is sweepable here and
+in ``--backend`` like any other registry name.
+
 Standalone:
 
     PYTHONPATH=src:. python benchmarks/paged_decode.py \
-        [--backend dense,camformer] [--max-batch 4] [--max-new 8] \
-        [--spec-k 4] [--tp 1,2] [--smoke] [--json BENCH.json]
+        [--backend dense,camformer,hybrid] [--max-batch 4] [--max-new 8] \
+        [--spec-k 4] [--tp 1,2] [--prefill-impl fused,gather] \
+        [--smoke] [--json BENCH.json]
 """
 
 import argparse
@@ -192,15 +203,17 @@ def bench_continuous(backend: str, *, page_size=16, max_len=96, max_new=12):
     resident slot decodes; with ``prefill_slice=page_size`` its prompt
     prefills one page per tick and the resident slot must KEEP gaining a
     token every tick (no stop-the-world prefill)."""
+    prefill_slice = page_size
     _, eng = _engine(backend, max_batch=2, max_len=max_len,
                      page_size=page_size, mode="sync",
-                     prefill_slice=page_size)
+                     prefill_slice=prefill_slice)
     a = Request(prompt=[5, 9, 2], sampling=SamplingParams(max_new=max_new))
     eng.submit(a)
     eng.step()
-    joiner = Request(prompt=list(range(100, 100 + 4 * page_size)),
-                     sampling=SamplingParams(max_new=2))
+    prompt = list(range(100, 100 + 4 * page_size))
+    joiner = Request(prompt=prompt, sampling=SamplingParams(max_new=2))
     eng.submit(joiner)
+    chunk_ticks0 = eng.prefill_ticks
     interleaved = 0
     while joiner.state in (RequestState.QUEUED, RequestState.PREFILLING):
         before = len(a.tokens)
@@ -210,11 +223,70 @@ def bench_continuous(backend: str, *, page_size=16, max_len=96, max_new=12):
     eng.run()
     return {
         "backend": backend,
-        "prefill_ticks": 4,  # 4*page_size prompt, one page per tick
+        # one prefill_slice-sized chunk per tick, computed from the
+        # prompt actually submitted (not a hardcoded default-geometry 4)
+        "prefill_ticks": -(-len(prompt) // prefill_slice),
+        # the scheduler's measured chunk count for the joiner's span
+        "measured_prefill_ticks": eng.prefill_ticks - chunk_ticks0,
         "decode_ticks_during_prefill": interleaved,
         "joiner_tokens": len(joiner.tokens),
         "resident_tokens": len(a.tokens),
     }
+
+
+def bench_prefill_impl(backend: str, *, max_batch=4, page_size=16,
+                       max_len=96, repeats=2,
+                       impls=("fused", "gather")):
+    """Fused-vs-gather Sq>1 chunk lane: long prompts prefilled in
+    page-sized chunks (``prefill_slice=page_size``) under each
+    ``--prefill-impl`` realization, reporting chunk ticks/s plus the
+    analytic per-impl KV bytes READ per prefill token (the chunk reads
+    the pools once, so per-token bytes divide by the chunk size —
+    fused walks live pages, gather dereferences the table extent).
+    Token streams are asserted identical across impls, so the lane
+    measures realization cost, never output drift."""
+    from repro.models.transformer import dtype_of
+
+    prompt_len = 4 * page_size
+    prompts = [list(range(100 + 64 * i, 100 + 64 * i + prompt_len))
+               for i in range(max_batch)]
+    row = {"backend": backend, "prompt_len": prompt_len,
+           "prefill_slice": page_size, "lanes": {}}
+    tokens = {}
+    for impl in impls:
+        cfg, eng = _engine(backend, max_batch=max_batch, max_len=max_len,
+                           page_size=page_size, mode="sync",
+                           prefill_slice=page_size, prefill_impl=impl)
+        _timed_run(eng, prompts, 2)  # warm-up: compile chunk + decode
+        best = None
+        for _ in range(repeats):
+            ticks0, toks0 = eng.prefill_ticks, eng.prefill_tokens
+            wall, _, _, _ = _timed_run(eng, prompts, 2)
+            chunk_ticks = eng.prefill_ticks - ticks0
+            m = {
+                "chunk_ticks": chunk_ticks,
+                "prefill_tokens": eng.prefill_tokens - toks0,
+                "chunk_ticks_per_s": chunk_ticks / max(wall, 1e-9),
+            }
+            if best is None or (m["chunk_ticks_per_s"]
+                                > best["chunk_ticks_per_s"]):
+                best = m
+        io = get_backend(backend).paged_io_stats(
+            cfg, dtype_of(cfg), kv_len=prompt_len, page_size=page_size,
+            n_table_pages=eng.kv.max_pages_per_seq)
+        best["kv_read_bytes_per_prefill_token"] = (
+            io[f"prefill_{impl}_read_bytes"] * cfg.n_layers / page_size)
+        row["lanes"][impl] = best
+        tokens[impl] = sorted(
+            (r.rid, tuple(r.tokens)) for r in eng.done)
+    if "fused" in tokens and "gather" in tokens:
+        assert tokens["fused"] == tokens["gather"], (
+            f"{backend}: fused prefill chunks diverge from the gather "
+            "oracle")
+        row["fused_vs_gather_chunk_ticks"] = (
+            row["lanes"]["fused"]["chunk_ticks_per_s"]
+            / max(row["lanes"]["gather"]["chunk_ticks_per_s"], 1e-9))
+    return row
 
 
 def bench_prefix_sharing(backend="dense", *, n_requests=6, prefix_len=32,
@@ -286,11 +358,12 @@ def bench_tp(backend: str, *, tps, max_batch=4, max_new=8, page_size=16,
     return row
 
 
-def collect(backends, *, max_batch=4, max_new=8, spec_k=0, tps=(1,)):
+def collect(backends, *, max_batch=4, max_new=8, spec_k=0, tps=(1,),
+            prefill_impls=()):
     """One metrics payload covering every report — the single collection
     path shared by run() (run.py harness) and main() (standalone CLI)."""
     payload = {"backends": {}, "continuous": {}, "sharing": {},
-               "speculative": {}, "tp": {}}
+               "speculative": {}, "tp": {}, "prefill": {}}
     for b in backends:
         payload["backends"][b] = bench_backend(
             b, max_batch=max_batch, max_new=max_new)
@@ -301,6 +374,9 @@ def collect(backends, *, max_batch=4, max_new=8, spec_k=0, tps=(1,)):
         if tuple(tps) != (1,):
             payload["tp"][b] = bench_tp(
                 b, tps=tps, max_batch=max_batch, max_new=max_new)
+        if prefill_impls:
+            payload["prefill"][b] = bench_prefill_impl(
+                b, max_batch=max_batch, impls=tuple(prefill_impls))
     payload["sharing"][backends[0]] = bench_prefix_sharing(backends[0])
     return payload
 
@@ -408,6 +484,32 @@ def run(csv_rows, *, max_batch=4, max_new=8, backends=("dense", "camformer"),
                  m["kv_read_bytes_per_token_per_device"],
                  f"fused decode reads / device at tp={tp}"))
 
+    for b, r in payload.get("prefill", {}).items():
+        print(f"\n== chunked-prefill impl sweep ({b}): "
+              f"{r['prompt_len']}-token prompts, "
+              f"{r['prefill_slice']}-token chunks ==")
+        print(f"  {'impl':8s} {'chunk ticks/s':>14s} "
+              f"{'KV rd B/prefill tok':>20s}")
+        for impl, m in r["lanes"].items():
+            print(f"  {impl:8s} {m['chunk_ticks_per_s']:14.1f} "
+                  f"{m['kv_read_bytes_per_prefill_token']:20.0f}")
+            csv_rows.append(
+                (f"paged_prefill_chunk_ticks_per_s_{b}_{impl}",
+                 m["chunk_ticks_per_s"],
+                 f"{r['prefill_slice']}-token chunks, sync loop"))
+            csv_rows.append(
+                (f"paged_kv_read_bytes_per_prefill_token_{b}_{impl}",
+                 m["kv_read_bytes_per_prefill_token"],
+                 "prefill-chunk KV bytes read / prompt token, all layers"))
+        if "fused_vs_gather_chunk_ticks" in r:
+            print(f"  {b}: fused/gather = "
+                  f"{r['fused_vs_gather_chunk_ticks']:.2f}x chunk ticks/s "
+                  f"(token streams asserted identical)")
+            csv_rows.append(
+                (f"paged_prefill_fused_vs_gather_chunk_ticks_{b}",
+                 r["fused_vs_gather_chunk_ticks"],
+                 "Sq>1 fused flash chunks vs the gather oracle"))
+
     share = payload["sharing"][backends[0]]
     print(f"\n== COW prefix sharing ({share['backend']}): "
           f"{share['n_requests']} requests, {share['prefix_len']}-token "
@@ -440,6 +542,12 @@ def main():
                          "bytes read/token over head-sharded page pools "
                          "(degrees beyond the device count are recorded "
                          "as skipped; '1' alone = no sweep)")
+    ap.add_argument("--prefill-impl", default="",
+                    help="comma-separated Sq>1 chunk realization sweep "
+                         "(e.g. 'fused,gather'): per-impl chunked-prefill "
+                         "ticks/s + analytic KV bytes read per prefill "
+                         "token, token streams asserted identical "
+                         "(empty = skip the lane)")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run; asserts overlapped >= sync ticks/s "
                          "and (with --spec-k) spec >= plain tokens/s")
@@ -449,9 +557,11 @@ def main():
     backends = tuple(args.backend.split(","))
     max_new = 6 if args.smoke else args.max_new
     tps = tuple(int(x) for x in args.tp.split(","))
+    prefill_impls = tuple(x for x in args.prefill_impl.split(",") if x)
 
     payload = collect(backends, max_batch=args.max_batch, max_new=max_new,
-                      spec_k=args.spec_k, tps=tps)
+                      spec_k=args.spec_k, tps=tps,
+                      prefill_impls=prefill_impls)
     if args.smoke and args.spec_k and "binary" not in payload["speculative"]:
         # the gated lane: binary drafts == the binary target by
         # construction, so its acceptance (and the multi-token win) is
@@ -536,6 +646,36 @@ def main():
                         >= r2["gather"]["ticks_per_s"]), (
                     "dense: fused paged flash-decode slower than the "
                     "gather reference (reproduced)")
+        # the prefill-chunk kernel win gate, same split as the decode
+        # one: the deterministic half — fused chunks read only live KV
+        # rows while gather dereferences the full table extent — is
+        # asserted for every swept backend everywhere; the wall-clock
+        # half (fused chunk ticks/s >= gather, remeasure-retry) only
+        # where the Pallas kernel runs compiled (TPU).  For camformer
+        # both prefill columns are the gather numbers (no fused Sq>1
+        # CAM kernel yet), so <= holds trivially there.
+        on_tpu = jax.default_backend() == "tpu"
+        for b, r in payload.get("prefill", {}).items():
+            lanes = r["lanes"]
+            if "fused" not in lanes or "gather" not in lanes:
+                continue
+            assert (lanes["fused"]["kv_read_bytes_per_prefill_token"]
+                    <= lanes["gather"]["kv_read_bytes_per_prefill_token"]), (
+                f"{b}: fused prefill chunks read more KV bytes than the "
+                f"gather reference: {lanes}")
+            if on_tpu and r["fused_vs_gather_chunk_ticks"] < 1.0:
+                # wall-clock race on a noisy runner: re-measure with more
+                # repeats before declaring the chunk-kernel win regressed
+                r2 = bench_prefill_impl(b, max_batch=args.max_batch,
+                                        repeats=4)
+                l2 = r2["lanes"]
+                print(f"{b}: remeasured fused "
+                      f"{l2['fused']['chunk_ticks_per_s']:.1f} | gather "
+                      f"{l2['gather']['chunk_ticks_per_s']:.1f} "
+                      f"chunk ticks/s")
+                assert r2["fused_vs_gather_chunk_ticks"] >= 1.0, (
+                    f"{b}: fused Sq>1 flash-prefill chunks slower than "
+                    "the gather reference (reproduced)")
 
 
 if __name__ == "__main__":

@@ -153,6 +153,12 @@ def _server_view(engine, metrics) -> dict:
             "peak_pages": engine.peak_pages,
             "pool_pages": engine.kv.n_pages - 1,
             "tp": engine.tp,
+            # TTFT attribution: how much of the run was prefill-path
+            # work (chunk ticks / prompt tokens materialized) — a TTFT
+            # regression with flat prefill counters is a decode/queueing
+            # problem, a rising one sits on the chunked-prefill path
+            "prefill_tokens": engine.prefill_tokens,
+            "prefill_ticks": engine.prefill_ticks,
         },
     }
 
@@ -388,6 +394,11 @@ def print_report(r):
         f"{r['prefix_hit_rate']:.0%}, peak pages "
         f"{r['engine']['peak_pages']}/{r['engine']['pool_pages']}, "
         f"{r['engine']['ticks']} ticks / {r['engine']['readbacks']} readbacks"
+    )
+    e = r["engine"]
+    print(
+        f"  prefill path: {e['prefill_tokens']} prompt tokens over "
+        f"{e['prefill_ticks']} chunk ticks (TTFT attribution)"
     )
 
 

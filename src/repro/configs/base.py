@@ -47,8 +47,15 @@ class ModelConfig:
     # operand, streaming softmax — decode bytes/token proportional to
     # LIVE pages); "gather" keeps the XLA page-gather + masked attend as
     # the selectable reference every kernel claim is pinned against.
-    # Prefill chunks (Sq > 1) always take the gather path.
     paged_impl: str = "fused"
+    # Sq > 1 paged realization (chunked-prefill and speculative-verify
+    # chunks): "auto" (default) follows paged_impl, so the single switch
+    # covers the whole serving path; "fused"/"gather" pin the chunk path
+    # independently (the bench's --prefill-impl sweep axis).  CAMformer
+    # chunks always gather — there is no fused Sq>1 CAM kernel yet; the
+    # "hybrid" backend flash-scores its chunks through the dense pool
+    # instead.
+    prefill_impl: str = "auto"
     # Distributed CAM search: shard_map the decode-time association stage
     # over the seq-sharded cache — local two-stage top-k per shard, then a
     # tiny candidate all-gather (k values/shard, not N scores) + global
@@ -117,6 +124,11 @@ class ModelConfig:
                 f"paged_impl={self.paged_impl!r} must be 'fused' (Pallas "
                 "paged decode kernels) or 'gather' (XLA page-gather "
                 "reference)")
+        if self.prefill_impl not in ("auto", "fused", "gather"):
+            raise ValueError(
+                f"prefill_impl={self.prefill_impl!r} must be 'auto' "
+                "(follow paged_impl), 'fused' (Sq>1 paged flash kernel) "
+                "or 'gather' (XLA page-gather reference)")
         if self.spec_k < 0:
             raise ValueError(f"spec_k={self.spec_k} must be >= 0")
         if not self.spec_backend:
@@ -165,6 +177,13 @@ class ModelConfig:
         """The single backend name if every layer agrees, else None."""
         names = set(self.backend_names)
         return names.pop() if len(names) == 1 else None
+
+    @property
+    def prefill_paged_impl(self) -> str:
+        """Effective Sq > 1 (prefill-chunk / verify) paged realization:
+        prefill_impl, with "auto" following paged_impl."""
+        return self.paged_impl if self.prefill_impl == "auto" \
+            else self.prefill_impl
 
     @property
     def padded_experts(self) -> int:

@@ -257,11 +257,15 @@ def binary_paged_attention(
     fused and gather realizations score identically and trash-page
     garbage never leaks into the temperature.
 
-    Decode rows (Sq == 1, ``impl="fused"``) run the paged flash-decode
-    kernel (kernels/paged_flash_decode.py) with in-register K
-    binarization — bytes/token proportional to live pages.  Prefill
-    chunks (Sq > 1) and ``impl="gather"`` gather the pages into logical
-    order and run the same masked full softmax in XLA (the reference).
+    ``impl="fused"`` runs the paged flash kernel
+    (kernels/paged_flash_decode.py) with in-register K binarization —
+    bytes proportional to live pages: decode rows (Sq == 1) through
+    ``kops.paged_flash_decode``, chunk rows (Sq > 1: chunked prefill and
+    speculative verify, whose per-query sequential scales arrive as a
+    3-D ``k_scale`` and fold into the temperature) through
+    ``kops.paged_flash_prefill`` with the per-row causal anchor.
+    ``impl="gather"`` gathers the pages into logical order and runs the
+    same masked full softmax in XLA (the pinned reference).
 
     Shapes as ``camformer_paged_attention`` but with dense
     ``k_pages`` (P, H_kv, page, D).  Returns (B, H, Sq, Dv).
@@ -284,12 +288,19 @@ def binary_paged_attention(
     ks = jnp.broadcast_to(ks[:, :, None, :], (b, hkv, g, sq))
     temp = q_scale.reshape(b, hkv, g * sq) * ks.reshape(b, hkv, g * sq)
 
-    if sq == 1 and impl == "fused":
+    if impl == "fused":
         from repro.kernels import ops as kops  # local import: no cycle
 
-        return kops.paged_flash_decode(
+        if sq == 1:
+            return kops.paged_flash_decode(
+                q, k_pages, v_pages, page_table, kv_len,
+                q_positions.reshape(b).astype(jnp.int32),
+                temp=temp, binary=True, window=window, scale=scale)
+        # Chunk rows: positions are contiguous from the slot's offset,
+        # so the kernel takes the first position + per-row anchors.
+        return kops.paged_flash_prefill(
             q, k_pages, v_pages, page_table, kv_len,
-            q_positions.reshape(b).astype(jnp.int32),
+            q_positions[:, 0].astype(jnp.int32),
             temp=temp, binary=True, window=window, scale=scale)
 
     # Gather reference: logical-order pages, same scoring arithmetic.

@@ -33,8 +33,13 @@ through a Pallas paged kernel — the flash-decode skeleton
 via scalar-prefetched page-table rows with a streaming softmax, so
 decode reads are proportional to LIVE pages; ``"gather"`` keeps the XLA
 page-gather + masked attend as the reference oracle every kernel claim
-is pinned against (``kernels/ref.paged_gather_ref``).  Prefill chunks
-(Sq > 1) always take the gather path.
+is pinned against (``kernels/ref.paged_gather_ref``).  Sq > 1 chunk
+rows (chunked prefill and speculative verify) run the SAME flash
+skeleton with per-row causal anchors for dense/binary
+(``ModelConfig.prefill_impl``: "auto" follows paged_impl); camformer
+chunks still gather — there is no fused Sq>1 CAM kernel yet.  The
+``hybrid`` backend closes that gap structurally: flash-scored fused
+prefill chunks over a dense key pool + CAM paged decode.
 
 Per-layer policy lives on ``ModelConfig`` (``attn_backend`` +
 ``layer_backends``; ``cfg.backend_for(layer)`` resolves a name) so hybrid
@@ -80,6 +85,7 @@ from repro.utils import compat
 
 __all__ = [
     "AttentionBackend", "DenseBackend", "BinaryBackend", "CamformerBackend",
+    "HybridBackend",
     "register_backend", "get_backend", "list_backends", "backends_for",
 ]
 
@@ -301,6 +307,12 @@ class AttentionBackend:
         peak logical-order scratch the gather impl materializes per slot
         (the fused kernels stream page tiles — zero scratch).  Benchmarks
         multiply by ``n_layers`` / batch for the system-level numbers.
+
+        ``prefill_fused_read_bytes``/``prefill_gather_read_bytes``: the
+        same accounting for one Sq > 1 CHUNK attend (chunked prefill /
+        speculative verify) under each ``prefill_impl`` realization —
+        the chunk reads the pools once regardless of chunk length, so
+        bytes per prefill TOKEN divide by the chunk size.
         """
         hkv, d = cfg.n_kv_heads, cfg.head_dim
         item = jnp.dtype(dtype).itemsize
@@ -311,6 +323,8 @@ class AttentionBackend:
             "fused_read_bytes": live_rows * row,
             "gather_read_bytes": table_rows * row,
             "gather_scratch_bytes": table_rows * row,
+            "prefill_fused_read_bytes": live_rows * row,
+            "prefill_gather_read_bytes": table_rows * row,
         }
 
     # -- contiguous-cache write (shared ring-buffer clamp) --------------
@@ -404,21 +418,30 @@ class DenseBackend(AttentionBackend):
         return out, new_cache
 
     def _paged_attend(self, q, cache, positions, page_table, kv_len, cfg):
-        if q.shape[2] == 1 and cfg.paged_impl == "fused":
-            # Fused paged flash-decode (kernels/paged_flash_decode.py):
-            # page-table walk with an online softmax — decode bytes
+        sq = q.shape[2]
+        impl = cfg.paged_impl if sq == 1 else cfg.prefill_paged_impl
+        if impl == "fused":
+            # Fused paged flash kernel (kernels/paged_flash_decode.py):
+            # page-table walk with an online softmax — bytes
             # proportional to live pages, no logical-order gather.
+            # Sq > 1 chunk rows (chunked prefill / speculative verify)
+            # run the same skeleton with per-row causal anchors keyed
+            # on the chunk's first position (the slot's offsets).
             from repro.kernels import ops as kops
 
-            return kops.paged_flash_decode(
+            if sq == 1:
+                return kops.paged_flash_decode(
+                    q, cache["k_pages"], cache["v_pages"], page_table,
+                    kv_len.reshape(-1), positions[:, 0], window=cfg.window)
+            return kops.paged_flash_prefill(
                 q, cache["k_pages"], cache["v_pages"], page_table,
                 kv_len.reshape(-1), positions[:, 0], window=cfg.window)
         from repro.kernels.ref import paged_gather_ref
 
-        # Reference impl (and every prefill chunk): gather the slot's
-        # pages into logical order and run the standard masked attend —
-        # logical position p is row p of the gather, so the
-        # contiguous-cache masking applies verbatim.
+        # Reference impl: gather the slot's pages into logical order
+        # and run the standard masked attend — logical position p is
+        # row p of the gather, so the contiguous-cache masking applies
+        # verbatim.
         ck = paged_gather_ref(cache["k_pages"], page_table)
         cv = paged_gather_ref(cache["v_pages"], page_table)
         kv_pos = jnp.arange(ck.shape[2], dtype=jnp.int32)[None]
@@ -492,10 +515,14 @@ class BinaryBackend(DenseBackend):
                 cache["k_scale"], k, positions.astype(jnp.int32),
                 kv_len.reshape(k.shape[0]).astype(jnp.int32), base)
             new_cache["k_means"] = means
+        # decode rows follow paged_impl; Sq > 1 chunk rows (prefill /
+        # verify — the per-query scales above fold into the kernel's
+        # temperature operand) follow the effective prefill impl
+        impl = cfg.paged_impl if q.shape[2] == 1 else cfg.prefill_paged_impl
         out = binary_paged_attention(
             q, new_cache["k_pages"], new_cache["v_pages"],
             k_scale, page_table, kv_len, positions,
-            self.spec(cfg), window=cfg.window, impl=cfg.paged_impl)
+            self.spec(cfg), window=cfg.window, impl=impl)
         return out, new_cache
 
 
@@ -613,6 +640,10 @@ class CamformerBackend(AttentionBackend):
             "fused_read_bytes": live_rows * kp_row + v_sel,
             "gather_read_bytes": table_rows * kp_row + v_sel,
             "gather_scratch_bytes": table_rows * kp_row,
+            # no fused Sq>1 CAM kernel yet (ROADMAP stretch): chunk
+            # attends gather the packed pool under either prefill_impl
+            "prefill_fused_read_bytes": table_rows * kp_row + v_sel,
+            "prefill_gather_read_bytes": table_rows * kp_row + v_sel,
         }
 
     # -- internals ------------------------------------------------------
@@ -807,6 +838,102 @@ class CamformerBackend(AttentionBackend):
         return out.astype(q.dtype)
 
 
+# ---------------------------------------------------------------------------
+# hybrid: flash-scored prefill + CAM decode
+
+
+class HybridBackend(CamformerBackend):
+    """Flash-prefill hybrid: dense flash-scored fused prefill chunks +
+    CAM paged decode — the analog/digital split of charge-based hybrid
+    attention accelerators layered on X-Former-style mixed tiling.
+
+    The paged pools carry BOTH key representations: a dense ``k_pages``
+    pool for the Sq > 1 chunk path — chunked prefill, the TTFT-critical
+    hot path, runs the fused paged flash kernel with an EXACT softmax —
+    and the bit-packed ``kp_pages`` + running ``k_scale`` for the CAM
+    decode path (two-stage top-k search per generated token).  Every
+    page write updates both, so either attend is always current.
+
+    Speculative VERIFY chunks (``cfg.spec_verify``) deliberately take
+    the CAM path with sequential per-query scales (``_chunk_scale_seq``
+    + the ``k_means`` stash): speculation's exactness contract
+    (serving/speculate.py) is that verify logits reproduce what the
+    TARGET's sequential decode would emit — and this backend's decode
+    is CAM, so flash-scoring the verify chunk would break token-level
+    acceptance.  Only non-verify prefill chunks flash-score.
+
+    Cost: the dense K pool adds ``H_kv * D * itemsize`` bytes/token over
+    camformer (values dominate either way); in exchange prefill keeps
+    full softmax fidelity AND live-page-proportional reads.
+    """
+
+    name = "hybrid"
+    mode = "camformer"
+
+    def page_spec(self, cfg, n_pages, page_size, max_batch, dtype):
+        spec = super().page_spec(cfg, n_pages, page_size, max_batch, dtype)
+        spec["k_pages"] = (jax.ShapeDtypeStruct(
+            (n_pages, cfg.n_kv_heads, page_size, cfg.head_dim), dtype),
+            (None, "kv_heads", None, "head_dim"))
+        return spec
+
+    def cache_bytes_per_token(self, cfg, dtype):
+        d = cfg.head_dim
+        item = jnp.dtype(dtype).itemsize
+        # packed keys + dense keys (flash prefill) + dense values
+        return cfg.n_kv_heads * (d // 8 + 2 * d * item)
+
+    def _paged_write(self, cache, k, v, positions, page_table, kv_len, cfg,
+                     base=None):
+        pages = super()._paged_write(cache, k, v, positions, page_table,
+                                     kv_len, cfg, base=base)
+        page = cache["k_pages"].shape[2]
+        b = k.shape[0]
+        phys, row = _page_phys_rows(
+            page_table, positions.astype(jnp.int32), page,
+            kv_len.reshape(b).astype(jnp.int32))
+        pages["k_pages"] = cache["k_pages"].at[phys, :, row].set(
+            k.astype(cache["k_pages"].dtype).transpose(0, 2, 1, 3))
+        return pages
+
+    def prefill(self, q, k, v, cfg, *, causal=True, positions=None,
+                window=None):
+        # whole-prompt prefill / training attend: flash-scored (exact
+        # softmax), matching the paged chunk path below
+        return get_backend("dense").prefill(
+            q, k, v, cfg, causal=causal, positions=positions, window=window)
+
+    def paged_decode(self, q, cache, k, v, positions, page_table, kv_len,
+                     cfg, *, base=None):
+        if q.shape[2] > 1 and not cfg.spec_verify:
+            # flash-scored prefill chunk over the dense key pool; the
+            # packed pool and running k_scale were updated by the same
+            # write, so the CAM decode that follows reads current state
+            new_cache = self._paged_write(
+                cache, k, v, positions, page_table, kv_len, cfg, base=base)
+            out = get_backend("dense")._paged_attend(
+                q, new_cache, positions, page_table, kv_len, cfg)
+            return out, new_cache
+        # decode rows and speculative verify chunks: the CAM search
+        # path (verify must reproduce the sequential CAM decode)
+        return super().paged_decode(q, cache, k, v, positions, page_table,
+                                    kv_len, cfg, base=base)
+
+    def paged_io_stats(self, cfg, dtype, *, kv_len, page_size,
+                       n_table_pages):
+        stats = super().paged_io_stats(
+            cfg, dtype, kv_len=kv_len, page_size=page_size,
+            n_table_pages=n_table_pages)
+        # decode columns stay CAM; prefill chunks read the DENSE pools
+        item = jnp.dtype(dtype).itemsize
+        row = 2 * cfg.n_kv_heads * cfg.head_dim * item
+        live_rows = -(-max(kv_len, 1) // page_size) * page_size
+        stats["prefill_fused_read_bytes"] = live_rows * row
+        stats["prefill_gather_read_bytes"] = n_table_pages * page_size * row
+        return stats
+
+
 register_backend(DenseBackend())
 register_backend(BinaryBackend())
 register_backend(CamformerBackend())
+register_backend(HybridBackend())

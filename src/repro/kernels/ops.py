@@ -28,6 +28,7 @@ __all__ = [
     "bacam_paged_scores_topk",
     "flash_attention",
     "paged_flash_decode",
+    "paged_flash_prefill",
     "bitslice_vmm",
     "MASKED_SCORE",
 ]
@@ -222,6 +223,60 @@ def paged_flash_decode(q, k_pages, v_pages, page_table, kv_len, q_pos, *,
             qr, k_pages, v_pages, page_table, kv_len.reshape(b),
             q_pos.reshape(b), binary=binary, window=window)
     return out.reshape(b, h, 1, dv).astype(q.dtype)
+
+
+def paged_flash_prefill(q, k_pages, v_pages, page_table, kv_len, q_pos, *,
+                        temp=None, scale=None, binary=False, window=None,
+                        interpret=None):
+    """Fused paged flash attention for Sq > 1 chunk rows — the chunked
+    continuous-prefill and speculative-verify hot path.  Same kernel
+    skeleton as ``paged_flash_decode`` (scalar-prefetched page-table
+    walk, online-softmax VMEM scratch, dead-tile skip) with the chunk
+    folded into the row axis and a per-row causal anchor.
+
+    q: (B, H, Sq, D) chunk queries (GQA: H = G * H_kv);
+    k_pages/v_pages: (P, H_kv, page, D[v]) one layer's pools;
+    page_table: (B, NP) int32; kv_len: (B,) int32 post-write extent
+    INCLUDING the chunk; q_pos: (B,) int32 — the chunk's FIRST position
+    per slot (the scheduler's ``offsets``), row s anchors at q_pos + s.
+    temp: (B, H_kv, G * Sq) per-row softmax temperature (binary HAD
+    scoring; under spec_verify these are the sequential per-query
+    running-k_scale values from ``_chunk_scale_seq``) — per-row, so it
+    folds into the query operand and the kernel needs no spec awareness.
+    binary: score on sign(q)/sign(k) instead of q·k.
+
+    Dispatch triad as ``paged_flash_decode``: compiled Mosaic on TPU,
+    the jnp streaming walk off-TPU (identical accumulation order),
+    interpret=True forces the Pallas interpreter.
+
+    Returns (B, H, Sq, Dv) in q's dtype; kv_len == 0 rows are zeros.
+    """
+    from repro.kernels.ref import paged_flash_decode_ref
+
+    b, h, sq, d = q.shape
+    hkv = k_pages.shape[1]
+    g = h // hkv
+    dv = v_pages.shape[-1]
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    qr = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    if binary:
+        qr = jnp.where(qr > 0, 1.0, -1.0)
+    qr = qr * jnp.float32(scale)
+    if temp is not None:
+        # (B, H_kv, G*Sq) row-major (g, s) — matches the row fold below
+        qr = qr * temp.reshape(b, hkv, g, sq, 1).astype(jnp.float32)
+    qr = qr.reshape(b, hkv, g * sq, d)  # row r = g_idx * sq + s
+    if interpret is not None or not INTERPRET:
+        out = _pfd.paged_flash_decode(
+            qr, k_pages, v_pages, page_table, kv_len.reshape(b),
+            q_pos.reshape(b), sq=sq, binary=binary, window=window,
+            interpret=bool(interpret) if interpret is not None else False)
+    else:
+        out = paged_flash_decode_ref(  # off-TPU default: the jnp walk
+            qr, k_pages, v_pages, page_table, kv_len.reshape(b),
+            q_pos.reshape(b), sq=sq, binary=binary, window=window)
+    return out.reshape(b, h, sq, dv).astype(q.dtype)
 
 
 def flash_attention(q, k, v, q_offset=0, *, causal=True, window=None, scale=None,

@@ -11,9 +11,13 @@ right physical K/V page.  Per (slot, kv-head, logical page) grid cell
 the kernel fuses:
 
   * a per-page score tile (R, page) — R = GQA group rows per kv head
-    at ONE decode position — via one MXU dot; the (R, S_log) score
-    matrix never exists in HBM;
-  * masking from the slot's kv length / query position (+ window);
+    at ONE decode position, or R = G * Sq chunk rows when ``sq > 1``
+    (chunked prefill / speculative verify) — via one MXU dot; the
+    (R, S_log) score matrix never exists in HBM;
+  * masking from the slot's kv length / query position (+ window); for
+    ``sq > 1`` the causal anchor is PER ROW: row r = g * sq + s sits at
+    position ``q_pos[b] + s`` (chunk positions are contiguous from the
+    slot's ``offsets``), which yields the intra-chunk causal mask;
   * an online (streaming) softmax: running max / denominator / output
     accumulator live in VMEM scratch across the page sweep (the
     canonical flash pattern of kernels/flash_attention.py), so there is
@@ -70,6 +74,7 @@ def _kernel(
     acc_scr,
     *,
     page: int,
+    sq: int,
     binary: bool,
     window: int | None,
 ):
@@ -107,13 +112,20 @@ def _kernel(
             q, kb, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)
 
-        # --- masking: validity (kv length) + causality from the slot's
-        # decode position (decode rows share one qpos per slot) ---
+        # --- masking: validity (kv length) + causality.  Decode
+        # (sq == 1) rows share one qpos per slot; sq > 1 chunk rows are
+        # causal PER ROW — row r = g * sq + s anchors at qpos + s, the
+        # intra-chunk mask keyed on the slot's chunk offset ---
         kpos = (j * page
                 + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1))
-        ok = jnp.logical_and(kpos < kvl, kpos <= qpos)
+        if sq > 1:
+            qrow = qpos + jax.lax.broadcasted_iota(
+                jnp.int32, (rows, page), 0) % sq
+        else:
+            qrow = qpos
+        ok = jnp.logical_and(kpos < kvl, kpos <= qrow)
         if window is not None:
-            ok = jnp.logical_and(ok, kpos > qpos - window)
+            ok = jnp.logical_and(ok, kpos > qrow - window)
         s = jnp.where(ok, s, NEG_INF)
 
         # --- online softmax update (flash_attention.py pattern) ---
@@ -136,7 +148,7 @@ def _kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("binary", "window", "interpret"))
+    jax.jit, static_argnames=("sq", "binary", "window", "interpret"))
 def paged_flash_decode(
     q_rows: jax.Array,
     k_pages: jax.Array,
@@ -145,6 +157,7 @@ def paged_flash_decode(
     kv_len: jax.Array,
     q_pos: jax.Array,
     *,
+    sq: int = 1,
     binary: bool = False,
     window: int | None = None,
     interpret: bool = True,
@@ -153,15 +166,22 @@ def paged_flash_decode(
 
     Args:
       q_rows: (B, H_kv, R, D) float32 — R = GQA-group query rows per kv
-        head, all at one position per slot, PRE-SCALED: dense rows carry
-        q * 1/sqrt(d); binary rows carry sign(q) * temp * 1/sqrt(d)
-        (the HAD temperature is per-row, so it folds into the operand).
+        head, PRE-SCALED: dense rows carry q * 1/sqrt(d); binary rows
+        carry sign(q) * temp * 1/sqrt(d) (the HAD temperature — per-slot
+        running k_scale, or sequential per-query scales under
+        spec_verify — is per-row, so it folds into the operand).  For
+        ``sq == 1`` all R rows share the slot's decode position; for
+        ``sq > 1`` (chunked prefill / speculative verify) R = G * Sq
+        with row r = g * sq + s at position ``q_pos[b] + s``.
       k_pages: (P, H_kv, page, D) key pool (one layer; bf16/f32).
       v_pages: (P, H_kv, page, Dv) value pool.
       page_table: (B, NP) int32 logical->physical page map; unallocated
         entries must hold a valid (trash) page index.
-      kv_len: (B,) int32 valid tokens per slot (0 = inert row).
-      q_pos: (B,) int32 decode position per slot (causal/window anchor).
+      kv_len: (B,) int32 valid tokens per slot (0 = inert row).  Under
+        ``sq > 1`` this is the post-write extent INCLUDING the chunk.
+      q_pos: (B,) int32 decode position per slot — for ``sq > 1`` the
+        chunk's FIRST position (the slot's ``offsets``).
+      sq: chunk length folded into the row axis (static).
       binary: binarize the K tile in-register (HAD sign-match scoring).
       interpret: run via the Pallas interpreter (CPU CI escape hatch).
 
@@ -173,9 +193,10 @@ def paged_flash_decode(
     np_ = page_table.shape[1]
     assert k_pages.shape[:3] == (n_pages, hkv, page), (
         k_pages.shape, v_pages.shape)
+    assert rows % sq == 0, (rows, sq)
     grid = (b, hkv, np_)
     kern = functools.partial(
-        _kernel, page=page, binary=binary, window=window)
+        _kernel, page=page, sq=sq, binary=binary, window=window)
 
     def _kv_map(b_, h, j, pt, kvl, qp):
         # Dead logical pages (at/after the kv extent) clamp onto the

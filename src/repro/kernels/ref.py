@@ -109,6 +109,7 @@ def paged_flash_decode_ref(
     kv_len: jax.Array,
     q_pos: jax.Array,
     *,
+    sq: int = 1,
     binary: bool = False,
     window: int | None = None,
 ) -> jax.Array:
@@ -124,8 +125,10 @@ def paged_flash_decode_ref(
     materializes the logical-order K/V scratch.  Short tables (serving
     decode: a handful of pages) unroll the sweep so XLA fuses the steps;
     long tables fall back to ``lax.scan``.  Shapes/semantics as the
-    kernel: q_rows (B, H_kv, R, D) PRE-SCALED rows, returns
-    (B, H_kv, R, Dv) float32, ``kv_len == 0`` rows are zeros.
+    kernel: q_rows (B, H_kv, R, D) PRE-SCALED rows (for ``sq > 1`` chunk
+    attends R = G * Sq with row r = g * sq + s causally anchored at
+    ``q_pos[b] + s``), returns (B, H_kv, R, Dv) float32, ``kv_len == 0``
+    rows are zeros.
     """
     from repro.core.topk import NEG_INF
 
@@ -135,6 +138,9 @@ def paged_flash_decode_ref(
     q = q_rows.astype(jnp.float32)
     kvl = kv_len.reshape(b, 1, 1, 1)
     qp = q_pos.reshape(b, 1, 1, 1)
+    if sq > 1:  # per-row intra-chunk causal anchors, as the kernel
+        qp = qp + (jnp.arange(rows, dtype=jnp.int32) % sq).reshape(
+            1, 1, rows, 1)
 
     def step(carry, j):
         m, denom, acc = carry

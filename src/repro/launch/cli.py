@@ -18,7 +18,7 @@ def add_backend_args(ap: argparse.ArgumentParser, *, choices=None,
                      layer_policy: bool = True):
     ap.add_argument("--backend", default=None, choices=choices,
                     help="attention backend (core/backend.py registry: "
-                         "dense | binary | camformer)")
+                         "dense | binary | camformer | hybrid)")
     ap.add_argument("--attn-mode", default=None, help=argparse.SUPPRESS)
     if layer_policy:
         ap.add_argument("--layer-backends", default=None,

@@ -50,6 +50,7 @@ def build_engine(args) -> ServeEngine:
         mode=args.mode,
         prefill_slice=args.prefill_slice,
         paged_impl=args.paged_impl,
+        prefill_impl=args.prefill_impl,
         spec_k=args.spec_k,
         spec_backend=args.spec_backend,
         tp=args.tp,
@@ -77,6 +78,13 @@ def main() -> None:
         "this many tokens across ticks",
     )
     ap.add_argument("--paged-impl", default=None, choices=("fused", "gather"))
+    ap.add_argument(
+        "--prefill-impl",
+        default=None,
+        choices=("auto", "fused", "gather"),
+        help="Sq>1 chunk realization (chunked prefill / speculative "
+        "verify): 'auto' follows --paged-impl",
+    )
     ap.add_argument(
         "--spec-k",
         type=int,

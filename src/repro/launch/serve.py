@@ -62,6 +62,12 @@ def main():
                     help="paged decode realization: fused Pallas "
                          "flash/CAM kernels (default) or the XLA "
                          "page-gather reference")
+    ap.add_argument("--prefill-impl", default=None,
+                    choices=("auto", "fused", "gather"),
+                    help="Sq>1 chunk realization (chunked prefill and "
+                         "speculative verify): fused paged flash kernel "
+                         "or the XLA page-gather reference; 'auto' "
+                         "(default) follows --paged-impl")
     ap.add_argument("--spec-k", type=int, default=None,
                     help="self-speculative decoding: draft this many "
                          "tokens per tick with the binary stack and "
@@ -91,6 +97,7 @@ def main():
                       n_pages=args.n_pages, mode=args.mode,
                       prefill_slice=args.prefill_slice,
                       paged_impl=args.paged_impl,
+                      prefill_impl=args.prefill_impl,
                       spec_k=args.spec_k, spec_backend=args.spec_backend,
                       tp=args.tp)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)

@@ -114,6 +114,7 @@ class ServeEngine:
                  prefix_sharing: bool = True, mode: str = "overlap",
                  prefill_slice: Optional[int] = None,
                  paged_impl: Optional[str] = None,
+                 prefill_impl: Optional[str] = None,
                  spec_k: Optional[int] = None,
                  spec_backend: Optional[str] = None,
                  tp: int = 1):
@@ -124,6 +125,11 @@ class ServeEngine:
             # layer's backend.paged_decode inside the fused device step
             # sees it; ModelConfig validates the value
             cfg = cfg.replace(paged_impl=paged_impl)
+        if prefill_impl is not None:
+            # per-engine override of the Sq>1 chunk realization
+            # (chunked prefill / speculative verify): "auto" follows
+            # paged_impl, "fused"/"gather" pin it independently
+            cfg = cfg.replace(prefill_impl=prefill_impl)
         if spec_k is not None or spec_backend is not None:
             # per-engine override of the speculative-decoding policy —
             # rides on cfg like paged_impl (ModelConfig validates)
@@ -293,6 +299,18 @@ class ServeEngine:
     @property
     def preemptions(self) -> int:
         return self.sched.preemptions
+
+    @property
+    def prefill_tokens(self) -> int:
+        """Prompt tokens materialized through chunked-prefill steps."""
+        return self.sched.prefill_tokens
+
+    @property
+    def prefill_ticks(self) -> int:
+        """Engine ticks that carried a prefill chunk (TTFT attribution:
+        flat chunk counters under a TTFT regression point at the decode
+        or queueing path, rising ones at the prefill path)."""
+        return self.sched.prefill_ticks
 
     @property
     def spec_proposed(self) -> int:

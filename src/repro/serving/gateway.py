@@ -500,6 +500,11 @@ class Gateway:
             "tp": eng.tp,
             "page_pool": eng.kv.occupancy(eng.tp),
             "preemptions": eng.preemptions,
+            # TTFT attribution: chunked-prefill activity next to the
+            # spec/preemption counters (flat under a TTFT regression =>
+            # decode/queueing problem, rising => prefill path)
+            "prefill_tokens": eng.prefill_tokens,
+            "prefill_ticks": eng.prefill_ticks,
             "spec_proposed": eng.spec_proposed,
             "spec_accepted": eng.spec_accepted,
             "spec_acceptance": eng.spec_acceptance,

@@ -160,6 +160,11 @@ class Scheduler:
         #                       and the traffic-SLO benchmark report this)
         self.spec_proposed = 0  # draft tokens proposed (spec_k > 0)
         self.spec_accepted = 0  # draft tokens the target verified
+        self.prefill_tokens = 0  # prompt tokens materialized via chunks
+        self.prefill_ticks = 0  # ticks that carried a prefill chunk
+        #  (gateway /metrics + serve_slo: TTFT attribution — a TTFT
+        #   regression with flat chunk counters is a decode/queue problem,
+        #   not a prefill-path one)
         # slots whose multi-token tick is dispatched but not yet resolved
         # (rollback may rewind their pos/dispatched/pages): excluded from
         # planning and drain until resolve_spec runs.  Keyed by slot,
@@ -417,6 +422,8 @@ class Scheduler:
                 self.dispatched[i] += 1
                 hot = hot or self.temps[i] > 0
                 self.kv.commit_pages(self.kv.owned(i))
+        self.prefill_tokens += sum(len(c) for c in chunks.values())
+        self.prefill_ticks += 1
         table = np.where(lens[:, None] > 0, self.kv.table, TRASH_PAGE)
         return PrefillChunk(tokens, lens, offsets, scale_base, table,
                             sample_index, bool(hot), tuple(emit))

@@ -51,7 +51,7 @@ def run_script(body: str, devices: int = 2, timeout: int = 600) -> str:
 
 
 @pytest.mark.parametrize("backend,spec_k", [
-    ("dense", 0), ("binary", 4), ("camformer", 4)])
+    ("dense", 0), ("binary", 4), ("camformer", 4), ("hybrid", 4)])
 def test_pool_partition_specs_shard_the_head_axis(backend, spec_k):
     """Every leaf of every backend's page_spec (k_pages/v_pages/kp_pages/
     k_scale/k_means) gets "tp" exactly on its kv_heads axis, mechanically
@@ -122,7 +122,8 @@ def test_engine_tp_validation_and_tp1_code_path():
 
 
 def identity_script(*, backend=None, layer_backends=None, spec_k=None,
-                    shared=0, tp=2, modes=("sync", "overlap")) -> str:
+                    shared=0, tp=2, modes=("sync", "overlap"),
+                    prefill_slice=None, prefill_impl=None) -> str:
     """A subprocess body that runs the same workload at tp=1 and tp=N
     (each sync and overlap) and asserts identical (rid, index, token)
     event streams with identical readback and tick counters."""
@@ -144,7 +145,9 @@ params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
 
 def run(tp, mode):
     eng = ServeEngine(md, cfg, params, max_batch=3, max_len=64,
-                      page_size=8, mode=mode, tp=tp, spec_k={spec_k!r})
+                      page_size=8, mode=mode, tp=tp, spec_k={spec_k!r},
+                      prefill_slice={prefill_slice!r},
+                      prefill_impl={prefill_impl!r})
     sp = SamplingParams(temperature=0.8, top_k=8, max_new=5)
     pre = list(range(1, {shared} + 1))
     for i in range(4):
@@ -188,6 +191,18 @@ def test_sharded_identity_mixed_stack():
     leaf-by-leaf and the fused step stays identical."""
     out = run_script(identity_script(layer_backends=("dense", "camformer"),
                                      shared=12), devices=2)
+    assert out.count("OK") == 2, out
+
+
+@pytest.mark.slow
+def test_sharded_identity_hybrid_fused_prefill_spec():
+    """The hybrid backend at tp=2: the extra dense k_pages leaf shards
+    on its kv-head axis like every other pool, fused Sq>1 flash-prefill
+    chunks (prefill_slice + COW shared prefix) and CAM spec-verify
+    chunks all run shard_map-wide — token-identical to tp=1."""
+    out = run_script(identity_script(backend="hybrid", spec_k=3, shared=12,
+                                     prefill_slice=8, prefill_impl="fused"),
+                     devices=2)
     assert out.count("OK") == 2, out
 
 
