@@ -54,6 +54,10 @@ REQUIRED_KEYS = (
     "n_requests",
     "completed",
     "cancelled",
+    "timed_out",
+    "rejected",
+    "errored",
+    "unfinished",
     "wall_s",
     "throughput_rps",
     "tokens_per_s",
@@ -81,6 +85,7 @@ def engine_kwargs(args) -> dict:
         "prefill_slice": args.page_size,  # one fixed-size prefill chunk/jit
         "tp": args.tp,
         "spec_k": args.spec_k,
+        "max_queue": args.max_queue,
     }
 
 
@@ -122,7 +127,12 @@ def build_workload(args, vocab: int):
 
 
 def _sampling(args) -> SamplingParams:
-    return SamplingParams(temperature=args.temperature, top_k=8, max_new=args.max_new)
+    return SamplingParams(
+        temperature=args.temperature,
+        top_k=8,
+        max_new=args.max_new,
+        deadline_ms=args.deadline_ms,
+    )
 
 
 def _warmup(engine, args):
@@ -256,6 +266,8 @@ async def _drive_url(args, workload, host, port):
         "top_k": 8,
         "max_new": args.max_new,
     }
+    if args.deadline_ms is not None:
+        spec_base["deadline_ms"] = args.deadline_ms
     # warmup request outside the clock (jit compiles on first traffic)
     await _sse_generate(host, port, dict(spec_base, prompt=[3, 5, 8, 1]))
 
@@ -320,10 +332,25 @@ def _pcts(samples):
 
 def build_report(args, records, wall, view, driver):
     ttfts, tpots, per_req_ok, tokens = [], [], [], 0
-    completed = cancelled = 0
+    completed = cancelled = timed_out = rejected = errored = unfinished = 0
     for rec in records:
-        if rec["finish"] in ("cancelled", "rejected", None):
+        # every request must reach a terminal finish_reason; the full
+        # breakdown (request.py docstring table) lands in the report so
+        # a deadline lane can gate on the timed-out fraction
+        if rec["finish"] is None:
+            unfinished += 1
+            continue
+        if rec["finish"] == "cancelled":
             cancelled += 1
+            continue
+        if rec["finish"] == "timeout":
+            timed_out += 1
+            continue
+        if rec["finish"] == "rejected":
+            rejected += 1
+            continue
+        if rec["finish"] == "error":
+            errored += 1
             continue
         completed += 1
         tokens += len(rec["times"])
@@ -354,6 +381,12 @@ def build_report(args, records, wall, view, driver):
         "seed": args.seed,
         "completed": completed,
         "cancelled": cancelled,
+        "timed_out": timed_out,
+        "rejected": rejected,
+        "errored": errored,
+        "unfinished": unfinished,
+        "timed_out_frac": timed_out / max(len(records), 1),
+        "deadline_ms": args.deadline_ms,
         "wall_s": wall,
         "throughput_rps": completed / max(wall, 1e-9),
         "tokens_per_s": tokens / max(wall, 1e-9),
@@ -384,6 +417,16 @@ def print_report(r):
         f"  completed {r['completed']}/{r['n_requests']} in {r['wall_s']:.2f}s "
         f"({r['throughput_rps']:.2f} rps, {r['tokens_per_s']:.1f} tok/s)"
     )
+    other = (
+        r["cancelled"] + r["timed_out"] + r["rejected"] + r["errored"] + r["unfinished"]
+    )
+    if other:
+        print(
+            f"  non-completions: {r['timed_out']} timed out "
+            f"({r['timed_out_frac']:.0%} of submits), "
+            f"{r['rejected']} rejected, {r['errored']} errored, "
+            f"{r['cancelled']} cancelled, {r['unfinished']} unfinished"
+        )
     print(
         f"  goodput under SLO (ttft<={r['slo']['ttft_ms']:.0f}ms, "
         f"tpot<={r['slo']['tpot_ms']:.0f}ms): {r['goodput_rps']:.2f} rps "
@@ -403,11 +446,19 @@ def print_report(r):
 
 
 def check_report(r, *, smoke_ttft_bound_ms):
-    """--smoke gate: well-formed report, nonzero goodput, bounded p99 TTFT."""
+    """--smoke gate: well-formed report, every request terminal, nonzero
+    goodput, bounded p99 TTFT.  Timed-out requests are allowed (a
+    ``--deadline-ms`` lane expects some) — but silent drops, crashes,
+    and cancellations are not."""
     missing = [k for k in REQUIRED_KEYS if k not in r]
     assert not missing, f"SLO report missing keys: {missing}"
+    assert r["unfinished"] == 0, (
+        f"{r['unfinished']} requests never reached a terminal finish_reason"
+    )
     assert r["completed"] > 0, "no request completed"
-    assert r["cancelled"] == 0, f"{r['cancelled']} requests failed"
+    assert r["cancelled"] == 0, f"{r['cancelled']} requests cancelled"
+    assert r["errored"] == 0, f"{r['errored']} requests crashed"
+    assert r["rejected"] == 0, f"{r['rejected']} requests rejected"
     assert r["goodput_rps"] > 0, (
         f"zero goodput: every completion violated the smoke SLO "
         f"(ttft p99 {r['ttft_ms']['p99']:.0f} ms, "
@@ -449,6 +500,20 @@ def main():
         help="self-speculative drafts per tick (None = config default)",
     )
     ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument(
+        "--deadline-ms",
+        type=float,
+        default=None,
+        help="per-request deadline: late requests end with "
+        "finish_reason='timeout' and the report gains the timed-out "
+        "fraction (every request must still reach a terminal state)",
+    )
+    ap.add_argument(
+        "--max-queue",
+        type=int,
+        default=None,
+        help="bounded admission queue (gateway replies 429 beyond it)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--slo-ttft-ms", type=float, default=2500.0)
     ap.add_argument("--slo-tpot-ms", type=float, default=1000.0)

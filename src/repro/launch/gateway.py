@@ -28,7 +28,7 @@ from repro.configs import get_config, smoke_config
 from repro.launch.cli import add_backend_args, apply_backend_args
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving import ServeEngine
+from repro.serving import ServeEngine, parse_faults
 from repro.serving.gateway import Gateway
 
 
@@ -39,6 +39,7 @@ def build_engine(args) -> ServeEngine:
         cfg = cfg.replace(prefill_chunk=args.prefill_chunk)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    faults = parse_faults(args.faults) if getattr(args, "faults", None) else None
     return ServeEngine(
         md,
         cfg,
@@ -54,6 +55,8 @@ def build_engine(args) -> ServeEngine:
         spec_k=args.spec_k,
         spec_backend=args.spec_backend,
         tp=args.tp,
+        max_queue=getattr(args, "max_queue", None),
+        faults=faults,
     )
 
 
@@ -92,8 +95,24 @@ def main() -> None:
         help="self-speculative decoding: binary-stack drafts per tick, "
         "verified k+1 at a time in one fused target step (0 = off)",
     )
-    ap.add_argument("--spec-backend", default=None,
-                    help="drafter attention backend (default 'binary')")
+    ap.add_argument(
+        "--spec-backend",
+        default=None,
+        help="drafter attention backend (default 'binary')",
+    )
+    ap.add_argument(
+        "--max-queue",
+        type=int,
+        default=None,
+        help="bounded admission: beyond this queue depth new requests get "
+        "HTTP 429 + Retry-After (default: unbounded)",
+    )
+    ap.add_argument(
+        "--faults",
+        default=None,
+        help="chaos fault plan, e.g. 'step.error@3,kv.exhaust@1:4' "
+        "(serving/faults.py grammar; default: none)",
+    )
     ap.add_argument(
         "--tp",
         type=int,

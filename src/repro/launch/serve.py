@@ -26,7 +26,7 @@ from repro.configs import get_config, smoke_config
 from repro.launch.cli import add_backend_args, apply_backend_args
 from repro.models import get_model_def
 from repro.models.module import init_params
-from repro.serving import Request, SamplingParams, ServeEngine
+from repro.serving import Request, SamplingParams, ServeEngine, parse_faults
 
 
 def main():
@@ -82,6 +82,18 @@ def main():
                          "fused tick shard_map-wide; 1 (default) is the "
                          "single-device engine, same code path, and any "
                          "degree is token-for-token identical to it")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bounded admission: submissions beyond this "
+                         "queue depth raise QueueFullError (default: "
+                         "unbounded)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline: requests not finished "
+                         "within this many ms of submit end with "
+                         "finish_reason='timeout'")
+    ap.add_argument("--faults", default=None,
+                    help="chaos fault plan, e.g. 'step.error@3,"
+                         "kv.exhaust@1:4,tick.delay@0:20:p0.5:d0.01' "
+                         "(serving/faults.py grammar; default: none)")
     ap.add_argument("--no-stream", action="store_true",
                     help="suppress per-token output, print only summaries")
     args = ap.parse_args()
@@ -92,6 +104,7 @@ def main():
         cfg = cfg.replace(prefill_chunk=args.prefill_chunk)
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    faults = parse_faults(args.faults) if args.faults else None
     eng = ServeEngine(md, cfg, params, max_batch=args.max_batch,
                       max_len=args.max_len, page_size=args.page_size,
                       n_pages=args.n_pages, mode=args.mode,
@@ -99,7 +112,7 @@ def main():
                       paged_impl=args.paged_impl,
                       prefill_impl=args.prefill_impl,
                       spec_k=args.spec_k, spec_backend=args.spec_backend,
-                      tp=args.tp)
+                      tp=args.tp, max_queue=args.max_queue, faults=faults)
     layout = cfg.uniform_backend or ",".join(cfg.layer_backends)
     shard = (f", head-sharded tp={eng.tp} over {jax.device_count()} devices"
              if eng.tp > 1 else "")
@@ -108,7 +121,7 @@ def main():
           f"(page table {eng.kv.table.shape}{shard})")
     sampling = SamplingParams(
         temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
-        max_new=args.max_new)
+        max_new=args.max_new, deadline_ms=args.deadline_ms)
     rng = jax.random.PRNGKey(7)
     shared = list(range(1, args.shared_prefix + 1))
     for i in range(args.requests):
@@ -128,6 +141,11 @@ def main():
           f"({eng.ticks / max(wall, 1e-9):.1f} ticks/s), "
           f"{eng.readbacks} readbacks, host idle "
           f"{eng.blocked_s / max(wall, 1e-9):.0%}")
+    if eng.tick_errors:
+        print(f"chaos: {eng.tick_errors} tick errors contained "
+              f"(last: {eng.last_error}), "
+              f"{eng.sched.timeouts} timeouts, "
+              f"{eng.sched.rejections} rejections")
     if eng.spec_k:
         print(f"speculation: k={eng.spec_k}, "
               f"{eng.spec_accepted}/{eng.spec_proposed} drafts accepted "

@@ -9,17 +9,30 @@ Public surface:
     for out in eng.stream(Request(prompt=ids,
                                   sampling=SamplingParams(max_new=64))):
         print(out.rid, out.token, out.finished)
+
+Robustness surface (serving/faults.py, ISSUE 10): bounded admission
+(``max_queue`` + ``RejectionError``/``QueueFullError`` at submit),
+per-request deadlines in ``SamplingParams``, crash containment
+(``finish_reason="error"``), and the deterministic chaos harness:
+
+    eng = ServeEngine(..., max_queue=64,
+                      faults=parse_faults("step.error@3"))
 """
 
 from repro.serving.engine import Admission, ServeEngine
+from repro.serving.faults import (NO_FAULTS, FaultPlan, FaultSpec,
+                                  InjectedFault, parse_faults)
 from repro.serving.kv_cache import (PagedKVCache, PrefixMatch, TRASH_PAGE,
                                     pages_for)
 from repro.serving.request import (Request, RequestOutput, RequestState,
                                    SamplingParams)
-from repro.serving.scheduler import Scheduler, TickPlan
+from repro.serving.scheduler import (QueueFullError, RejectionError,
+                                     Scheduler, TickPlan)
 
 __all__ = [
     "Admission", "ServeEngine", "Scheduler", "TickPlan", "PagedKVCache",
     "PrefixMatch", "TRASH_PAGE", "pages_for", "Request", "RequestOutput",
-    "RequestState", "SamplingParams",
+    "RequestState", "SamplingParams", "FaultPlan", "FaultSpec",
+    "InjectedFault", "NO_FAULTS", "parse_faults", "RejectionError",
+    "QueueFullError",
 ]

@@ -44,6 +44,7 @@ sharing, and LRU prefix retention; see that module.
 
 from __future__ import annotations
 
+import logging
 import time
 from typing import Iterator, List, NamedTuple, Optional, Tuple
 
@@ -58,6 +59,7 @@ from repro.models.transformer import dtype_of
 from repro.serving import sampler as S
 from repro.serving import sharded
 from repro.serving import speculate
+from repro.serving.faults import NO_FAULTS, FaultPlan
 from repro.serving.kv_cache import PagedKVCache, pages_for
 from repro.serving.request import (Request, RequestOutput, RequestState,
                                    SamplingParams)
@@ -65,6 +67,8 @@ from repro.serving.scheduler import Admission, Emit, Scheduler, TickPlan
 
 __all__ = ["Request", "SamplingParams", "RequestState", "RequestOutput",
            "Admission", "Scheduler", "ServeEngine"]
+
+log = logging.getLogger("repro.serving.engine")
 
 # Right-pad prompt batches to a multiple of this (bounds jit retraces).
 PREFILL_BUCKET = 16
@@ -117,7 +121,8 @@ class ServeEngine:
                  prefill_impl: Optional[str] = None,
                  spec_k: Optional[int] = None,
                  spec_backend: Optional[str] = None,
-                 tp: int = 1):
+                 tp: int = 1, max_queue: Optional[int] = None,
+                 faults: Optional[FaultPlan] = None):
         if paged_impl is not None:
             # per-engine override of the decode realization: "fused"
             # (Pallas paged flash/CAM kernels, the default) vs "gather"
@@ -180,12 +185,17 @@ class ServeEngine:
             # Default: full residency (every slot can reach max_len).
             # Smaller pools trade capacity for admission backpressure.
             n_pages = 1 + max_batch * per_seq  # +1: trash page
-        self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq)
+        # chaos harness: no-op-by-default fault hooks (serving/faults.py),
+        # threaded through the allocator and consulted once per tick
+        self.faults = NO_FAULTS if faults is None else faults
+        self.kv = PagedKVCache(n_pages, page_size, max_batch, per_seq,
+                               faults=self.faults)
         self.spec_k = cfg.spec_k
         self.sched = Scheduler(
             self.kv, max_batch=max_batch, max_len=max_len, seed=seed,
             prefix_sharing=prefix_sharing, prefill_slice=prefill_slice,
-            prefill_bucket=chunk or PREFILL_BUCKET, spec_k=self.spec_k)
+            prefill_bucket=chunk or PREFILL_BUCKET, spec_k=self.spec_k,
+            max_queue=max_queue)
         specs = md.page_specs(cfg, n_pages, page_size, max_batch)
         is_leaf = lambda x: (isinstance(x, tuple) and len(x) == 2
                              and isinstance(x[0], jax.ShapeDtypeStruct))
@@ -250,10 +260,17 @@ class ServeEngine:
         # been dispatched but not read yet (None in sync mode / idle)
         self._pending: Optional[_InFlight] = None
 
+        # crash containment: emits of the tick currently being read, with
+        # settled entries removed, so a readback that dies midway can
+        # drop exactly the remainder (see _collect / _fail_tick)
+        self._settling: List[Emit] = []
+
         # instrumentation (benchmarks / the single-readback invariant)
         self.readbacks = 0  # device->host transfers (token id arrays)
         self.blocked_s = 0.0  # host time spent blocked on readbacks
         self.ticks = 0  # decode steps dispatched
+        self.tick_errors = 0  # device ticks that failed and were contained
+        self.last_error: Optional[str] = None  # most recent contained error
 
     # ------------------------------------------------------------------
     # scheduler delegation (host state lives on self.sched)
@@ -418,6 +435,7 @@ class ServeEngine:
 
     def _dispatch(self, plan: TickPlan) -> _InFlight:
         """Enqueue one tick's device work; returns unread token handles."""
+        self.faults.raise_if("step.error")  # chaos: the fused step dies
         for src, dst in plan.forks:  # COW copies BEFORE any write
             self.caches = self._fork(
                 self.caches, jnp.int32(src), jnp.int32(dst))
@@ -501,12 +519,18 @@ class ServeEngine:
         Speculative ticks read ONE packed (B, m+1) array — per-slot
         target samples plus the accepted count — and settle each slot's
         emit run through ``Scheduler.resolve_spec`` (accepted prefix
-        ingested, rejected suffix dropped + rolled back)."""
+        ingested, rejected suffix dropped + rolled back).
+
+        ``self._settling`` mirrors the not-yet-settled emits (in settle
+        order) so crash containment can balance the in-flight accounting
+        when a readback raises partway through."""
         events: List[RequestOutput] = []
+        self._settling = list(inflight.prefill_emit + inflight.decode_emit)
         if inflight.prefill_emit:
             vals = self._read(inflight.prefill_tok)
             for e in inflight.prefill_emit:
                 out = self.sched.ingest(e, int(vals[e.slot]))
+                self._settling.pop(0)
                 if out is not None:
                     events.append(out)
         if inflight.decode_emit:
@@ -515,16 +539,68 @@ class ServeEngine:
                 groups: "dict[int, List[Emit]]" = {}
                 for e in inflight.decode_emit:  # slot-major consecutive
                     groups.setdefault(e.slot, []).append(e)
-                for slot, ems in groups.items():
+                for slot, ems in groups.items():  # insertion == settle order
                     events.extend(self.sched.resolve_spec(
                         slot, tuple(ems), vals[slot],
                         int(vals[slot, -1])))
+                    del self._settling[:len(ems)]
             else:
                 for e in inflight.decode_emit:
                     out = self.sched.ingest(e, int(vals[e.slot]))
+                    self._settling.pop(0)
                     if out is not None:
                         events.append(out)
         return events
+
+    # ------------------------------------------------------------------
+    # crash containment (the engine loops below route through this)
+    # ------------------------------------------------------------------
+    def _fail_tick(self, exc: BaseException,
+                   unsettled: List[Emit]) -> List[RequestOutput]:
+        """Contain one failed device tick: settle the in-flight
+        accounting for every sample that will never be read (`unsettled`
+        plus anything still dispatched-ahead), reset the on-device token
+        buffer, and fail the ACTIVE/RETIRING requests with
+        ``finish_reason="error"`` (pages invalidated + freed; see
+        ``Scheduler.fail_active``).  QUEUED requests are untouched — a
+        preempted request's lost sample regenerates bit-identically on
+        resume (keyed sampling) — so the engine keeps serving."""
+        for e in unsettled:
+            self.sched.drop(e)
+        if self._pending is not None:  # the dispatched-ahead tick is lost
+            for e in self._pending.prefill_emit + self._pending.decode_emit:
+                self.sched.drop(e)
+            self._pending = None
+        self._settling = []
+        self._tok_buf = self._zero_tok  # device token state is suspect
+        self.tick_errors += 1
+        self.last_error = f"{type(exc).__name__}: {exc}"
+        log.warning("device tick failed (%s); failing in-flight requests "
+                    "and continuing", self.last_error, exc_info=exc)
+        return self.sched.fail_active(self.last_error)
+
+    @staticmethod
+    def _plan_emits(plan: TickPlan) -> List[Emit]:
+        ems: List[Emit] = []
+        if plan.prefill is not None:
+            ems.extend(plan.prefill.emit)
+        if plan.decode is not None:
+            ems.extend(plan.decode.emit)
+        return ems
+
+    def _run_plan(self, plan: TickPlan) -> List[RequestOutput]:
+        """Dispatch + read one plan, containing device failures (the
+        sync-path tick body).  Planning itself stays OUTSIDE containment:
+        it is host-pure, so an exception there is a scheduler bug, not a
+        device fault to absorb."""
+        try:
+            inflight = self._dispatch(plan)
+        except Exception as e:
+            return self._fail_tick(e, self._plan_emits(plan))
+        try:
+            return self._collect(inflight)
+        except Exception as e:
+            return self._fail_tick(e, list(self._settling))
 
     # ------------------------------------------------------------------
     # the engine loops
@@ -532,7 +608,12 @@ class ServeEngine:
     def step(self) -> List[RequestOutput]:
         """One SYNCHRONOUS engine tick: plan, dispatch, read.  Returns
         this tick's streamed outputs (empty when the engine is idle)."""
-        return self._collect(self._dispatch(self.sched.plan_tick()))
+        self.faults.advance()
+        self._fault_delay()
+        plan = self.sched.plan_tick()
+        events = self.sched.take_events()  # timeouts expired at plan time
+        events.extend(self._run_plan(plan))
+        return events
 
     def prefill(self, admitted: Optional[List[Admission]] = None
                 ) -> List[RequestOutput]:
@@ -543,9 +624,16 @@ class ServeEngine:
         del admitted
         events: List[RequestOutput] = []
         while self.sched.has_prefilling:
+            self.faults.advance()
             plan = self.sched.plan_tick(admit=False, decode=False)
-            events.extend(self._collect(self._dispatch(plan)))
+            events.extend(self.sched.take_events())
+            events.extend(self._run_plan(plan))
         return events
+
+    def _fault_delay(self) -> None:
+        d = self.faults.delay("tick.delay")
+        if d > 0:
+            time.sleep(d)  # chaos: a straggling device / slow shard
 
     def poll(self) -> List[RequestOutput]:
         """ONE engine iteration honoring ``mode``; the unit external
@@ -560,13 +648,37 @@ class ServeEngine:
         ingests tokens, detects finishes, and plans (the overlap the
         paper's pipelined search/contextualization story calls for).
         The returned outputs are therefore those of the PREVIOUS poll's
-        tick; keep polling until ``has_pending`` clears to drain."""
+        tick; keep polling until ``has_pending`` clears to drain.
+
+        A device failure in either mode is CONTAINED: the tick's
+        in-flight requests finish with ``finish_reason="error"``, their
+        pages free, and the engine keeps serving (``tick_errors``
+        counts; see ``_fail_tick``)."""
         if self.mode == "sync":
             return self.step() if self.has_work else []
-        inflight = (self._dispatch(self.sched.plan_tick())
-                    if self.has_work else None)
-        events = ([] if self._pending is None
-                  else self._collect(self._pending))
+        self.faults.advance()
+        self._fault_delay()
+        inflight = None
+        events: List[RequestOutput] = []
+        if self.has_work:
+            plan = self.sched.plan_tick()
+            events.extend(self.sched.take_events())
+            try:
+                inflight = self._dispatch(plan)
+            except Exception as e:
+                events.extend(self._fail_tick(e, self._plan_emits(plan)))
+                return events
+        pending, self._pending = self._pending, None
+        if pending is not None:
+            try:
+                events.extend(self._collect(pending))
+            except Exception as e:
+                unsettled = list(self._settling)
+                if inflight is not None:  # the new tick dies with the device
+                    unsettled.extend(inflight.prefill_emit
+                                     + inflight.decode_emit)
+                events.extend(self._fail_tick(e, unsettled))
+                return events
         self._pending = (None if inflight is None or inflight.empty
                          else inflight)
         return events

@@ -30,11 +30,20 @@ Endpoints:
 
   * ``POST /v1/generate`` — body ``{"prompt": [ids], "max_new": N,
     "temperature": t, "top_k": k, "top_p": p, "stop": [ids],
-    "priority": n}``; responds ``text/event-stream``, one
-    ``data: {json}`` event per generated token (the final event carries
-    ``"finished": true``, a ``finish_reason``, and the full token list).
+    "priority": n, "deadline_ms": D, "queue_timeout_ms": Q}``; responds
+    ``text/event-stream``, one ``data: {json}`` event per generated
+    token (the final event carries ``"finished": true``, a
+    ``finish_reason``, the full token list, and — for
+    timeout/rejected/error finishes — the cause under ``"error"``).
   * ``GET /healthz`` — liveness + model/backend identity.
   * ``GET /metrics`` — JSON metrics snapshot.
+
+Backpressure (admission control BEFORE the request crosses onto the
+engine thread): a request that can never fit the engine gets HTTP 503;
+a full bounded queue (``ServeEngine(max_queue=...)``) gets HTTP 429 with
+a ``Retry-After`` header.  Requests the engine itself rejects finish
+with ``finish_reason="rejected"`` and the reason string in the SSE
+error field.
 """
 
 from __future__ import annotations
@@ -43,10 +52,12 @@ import asyncio
 import bisect
 import collections
 import json
+import logging
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
+from repro.serving.faults import NO_FAULTS, FaultPlan
 from repro.serving.request import Request, RequestOutput, RequestState, SamplingParams
 
 __all__ = [
@@ -57,6 +68,8 @@ __all__ = [
     "request_from_json",
     "serve_background",
 ]
+
+log = logging.getLogger("repro.serving.gateway")
 
 _BUCKETS_MS = (
     1.0,
@@ -128,6 +141,9 @@ class GatewayMetrics:
         self.submitted = 0
         self.completed = 0
         self.cancelled = 0
+        self.rejected = 0
+        self.timed_out = 0
+        self.errored = 0
         self.tokens_out = 0
         self.prompt_tokens = 0
         self.prefix_hit_tokens = 0
@@ -138,6 +154,12 @@ class GatewayMetrics:
     def record_submit(self) -> None:
         with self._lock:
             self.submitted += 1
+
+    def record_rejected(self) -> None:
+        """A request vetoed at the gateway (429/503): it never reached
+        the engine thread, so no RequestOutput will account for it."""
+        with self._lock:
+            self.rejected += 1
 
     def record_output(self, req: Request, rec: dict, out: RequestOutput) -> None:
         now = time.perf_counter()
@@ -153,6 +175,12 @@ class GatewayMetrics:
             if out.finished:
                 if out.finish_reason == "cancelled":
                     self.cancelled += 1
+                elif out.finish_reason == "rejected":
+                    self.rejected += 1
+                elif out.finish_reason == "timeout":
+                    self.timed_out += 1
+                elif out.finish_reason == "error":
+                    self.errored += 1
                 else:
                     self.completed += 1
                 self.prompt_tokens += len(req.prompt)
@@ -165,6 +193,9 @@ class GatewayMetrics:
                     "submitted": self.submitted,
                     "completed": self.completed,
                     "cancelled": self.cancelled,
+                    "rejected": self.rejected,
+                    "timed_out": self.timed_out,
+                    "errored": self.errored,
                     "tokens_out": self.tokens_out,
                     "prompt_tokens": self.prompt_tokens,
                     "prefix_hit_tokens": self.prefix_hit_tokens,
@@ -233,10 +264,41 @@ class EngineRunner(threading.Thread):
         self._cancel_q.append(rid)
         self._wake.set()
 
-    def stop(self, timeout: float = 30.0) -> None:
+    def admission_veto(self, req: Request) -> Optional[Tuple[str, bool]]:
+        """Admission control BEFORE ``req`` crosses onto the engine
+        thread: ``None`` to admit, else ``(reason, retryable)`` —
+        retryable means the bounded queue is full right now (HTTP 429 +
+        Retry-After), non-retryable means the request can never be
+        served by this engine (HTTP 503).  Reads scheduler state without
+        locking: queue length is a monotonic-enough signal for
+        backpressure, and the engine-thread submit path re-checks
+        authoritatively."""
+        sched = self.engine.sched
+        reason = sched.never_fit(req)
+        if reason is not None:
+            return reason, False
+        if sched.queue_full(extra=len(self._submit_q)):
+            return (
+                f"queue full ({len(sched.queue)} queued, "
+                f"max_queue {sched.max_queue})",
+                True,
+            )
+        return None
+
+    def stop(self, timeout: float = 30.0) -> bool:
+        """Stop the engine thread; returns False (and logs) if the join
+        timed out — the thread is still running, NOT cleanly stopped."""
         self._stopping.set()
         self._wake.set()
         self.join(timeout)
+        if self.is_alive():
+            log.error(
+                "engine thread failed to stop within %.1fs; "
+                "it is still running (daemon thread, will not block exit)",
+                timeout,
+            )
+            return False
+        return True
 
     # -- engine-thread loop ---------------------------------------------------
     def _drain_control(self) -> None:
@@ -268,19 +330,23 @@ class EngineRunner(threading.Thread):
                 continue
             try:
                 self.engine.submit(req)
-            except ValueError:
-                # invalid request (the gateway pre-validates; this is the
-                # engine-thread backstop) — reject without dying
-                req.state = RequestState.CANCELLED
+            except ValueError as e:
+                # rejected by admission control (RejectionError /
+                # QueueFullError / invalid request): the gateway
+                # pre-vetoes, this is the engine-thread authority —
+                # surface the reason, keep serving
+                req.state = RequestState.FINISHED
                 req.finish_reason = "rejected"
+                req.error = str(e)
                 out = RequestOutput(
                     rid=req.rid,
                     token=None,
                     index=0,
-                    state=RequestState.CANCELLED,
+                    state=RequestState.FINISHED,
                     finished=True,
                     finish_reason="rejected",
                     tokens=(),
+                    error=str(e),
                 )
                 if req.on_token:
                     req.on_token(out)
@@ -293,13 +359,21 @@ class EngineRunner(threading.Thread):
             self._drain_control()
             try:
                 eng.poll()
-            except MemoryError:
-                # a queued request can never fit the pool even with every
-                # slot drained: reject it instead of killing the thread
-                sched = eng.sched
-                if sched.queue:
-                    bad = sched.queue[sched._next_queued_index()]
-                    eng.cancel(bad.rid)
+            except Exception as e:
+                # device-step failures are contained INSIDE poll()
+                # (engine._fail_tick); anything reaching here is a
+                # host-side planning bug.  Fail the requests it touched
+                # and keep the thread alive — a serving gateway must not
+                # die to one poisoned tick.
+                log.exception(
+                    "engine poll raised (host-side bug); failing active "
+                    "requests and continuing"
+                )
+                try:
+                    eng.sched.fail_active(f"{type(e).__name__}: {e}")
+                except Exception:
+                    log.exception("containment itself failed")
+                self._wake.wait(self.idle_wait_s)
             if not (eng.has_work or eng.has_pending):
                 if self._wake.wait(self.idle_wait_s):
                     self._wake.clear()
@@ -327,12 +401,16 @@ def request_from_json(spec: dict, *, max_len: Optional[int] = None) -> Request:
     stop = spec.get("stop", ())
     if not isinstance(stop, (list, tuple)):
         raise ValueError("'stop' must be a list of token ids")
+    deadline = spec.get("deadline_ms")
+    queue_timeout = spec.get("queue_timeout_ms")
     sampling = SamplingParams(
         temperature=float(spec.get("temperature", 0.0)),
         top_k=int(spec.get("top_k", 0)),
         top_p=float(spec.get("top_p", 1.0)),
         stop=tuple(int(t) for t in stop),
         max_new=int(spec.get("max_new", 32)),
+        deadline_ms=None if deadline is None else float(deadline),
+        queue_timeout_ms=None if queue_timeout is None else float(queue_timeout),
     )
     if max_len is not None and len(prompt) + sampling.max_new > max_len:
         raise ValueError(
@@ -357,6 +435,8 @@ def _sse_event(out: RequestOutput) -> bytes:
     }
     if out.finished:
         payload["tokens"] = list(out.tokens)
+        if out.error is not None:
+            payload["error"] = out.error
     return b"data: " + json.dumps(payload).encode() + b"\n\n"
 
 
@@ -368,11 +448,23 @@ class Gateway:
     ``await serve_forever()`` blocks; ``await aclose()`` shuts both down.
     """
 
-    def __init__(self, engine, *, host: str = "127.0.0.1", port: int = 8000):
+    def __init__(
+        self,
+        engine,
+        *,
+        host: str = "127.0.0.1",
+        port: int = 8000,
+        faults: Optional[FaultPlan] = None,
+    ):
         self.engine = engine
         self.runner = EngineRunner(engine)
         self.host = host
         self.port = port
+        # gateway-level fault points (client disconnect storms); defaults
+        # to the engine's plan so one --faults flag arms the whole stack
+        self.faults = faults if faults is not None else getattr(
+            engine, "faults", NO_FAULTS
+        )
         self._server: Optional[asyncio.AbstractServer] = None
 
     async def start(self) -> "Gateway":
@@ -389,7 +481,10 @@ class Gateway:
         if self._server is not None:
             self._server.close()
             await self._server.wait_closed()
-        self.runner.stop()
+        if not self.runner.stop():
+            raise RuntimeError(
+                "engine thread did not stop cleanly (join timed out)"
+            )
 
     # -- request handling -----------------------------------------------------
     async def _handle(
@@ -438,6 +533,22 @@ class Gateway:
         except (ValueError, TypeError) as e:
             await _send_json(writer, 400, {"error": str(e)})
             return
+        veto = self.runner.admission_veto(req)
+        if veto is not None:
+            reason, retryable = veto
+            self.runner.metrics.record_rejected()
+            if retryable:  # bounded queue full NOW: back off and retry
+                await _send_json(
+                    writer,
+                    429,
+                    {"error": reason, "finish_reason": "rejected", "retry_after_s": 1},
+                    headers=(("Retry-After", "1"),),
+                )
+            else:  # can NEVER be served by this engine
+                await _send_json(
+                    writer, 503, {"error": reason, "finish_reason": "rejected"}
+                )
+            return
         loop = asyncio.get_running_loop()
         queue: asyncio.Queue = asyncio.Queue()
 
@@ -468,6 +579,12 @@ class Gateway:
                 writer.write(_sse_event(out))
                 await writer.drain()
                 if out.finished:
+                    return
+                if self.faults.fires("gateway.disconnect"):
+                    # chaos: simulate the client vanishing mid-stream —
+                    # drop the connection and cancel server-side, exactly
+                    # the disconnect path a real storm exercises
+                    self.runner.cancel(rid)
                     return
         except (ConnectionResetError, BrokenPipeError):
             self.runner.cancel(rid)
@@ -512,6 +629,11 @@ class Gateway:
             "pool_pages": eng.kv.n_pages - 1,
             "queue_depth": len(eng.queue),
             "active": sum(r is not None for r in eng.active),
+            # robustness counters: contained device-tick failures plus
+            # the scheduler's admission/deadline enforcement tallies
+            "tick_errors": eng.tick_errors,
+            "timeouts": eng.sched.timeouts,
+            "rejections": eng.sched.rejections,
         }
         return snap
 
@@ -526,13 +648,26 @@ async def _watch_disconnect(reader: asyncio.StreamReader) -> None:
             return
 
 
-async def _send_json(writer: asyncio.StreamWriter, status: int, obj: dict) -> None:
-    reason = {200: "OK", 400: "Bad Request", 404: "Not Found"}.get(status, "Error")
+async def _send_json(
+    writer: asyncio.StreamWriter,
+    status: int,
+    obj: dict,
+    headers: Tuple[Tuple[str, str], ...] = (),
+) -> None:
+    reason = {
+        200: "OK",
+        400: "Bad Request",
+        404: "Not Found",
+        429: "Too Many Requests",
+        503: "Service Unavailable",
+    }.get(status, "Error")
     body = json.dumps(obj, default=float).encode()
+    extra = "".join(f"{name}: {value}\r\n" for name, value in headers)
     writer.write(
         f"HTTP/1.1 {status} {reason}\r\n"
         f"Content-Type: application/json\r\n"
         f"Content-Length: {len(body)}\r\n"
+        f"{extra}"
         f"Connection: close\r\n\r\n".encode() + body
     )
     await writer.drain()
@@ -561,14 +696,29 @@ class _BackgroundGateway:
     def url(self) -> str:
         return f"http://{self.gateway.host}:{self.gateway.port}"
 
-    def stop(self, timeout: float = 30.0) -> None:
+    def stop(self, timeout: float = 30.0) -> bool:
+        """Stop the gateway thread; returns False (and logs) when the
+        join times out instead of pretending a clean shutdown."""
         loop, stop = self._box["loop"], self._box["stop"]
         loop.call_soon_threadsafe(stop.set)
         self._thread.join(timeout)
+        if self._thread.is_alive():
+            log.error(
+                "gateway thread failed to stop within %.1fs; "
+                "it is still running",
+                timeout,
+            )
+            return False
+        return True
 
 
 def serve_background(
-    engine, *, host: str = "127.0.0.1", port: int = 0, timeout: float = 60.0
+    engine,
+    *,
+    host: str = "127.0.0.1",
+    port: int = 0,
+    timeout: float = 60.0,
+    faults: Optional[FaultPlan] = None,
 ) -> _BackgroundGateway:
     """Start a gateway on a daemon thread (its own asyncio loop); returns
     once the socket is bound.  Used by the tests and the load benchmark's
@@ -578,7 +728,7 @@ def serve_background(
 
     def _main() -> None:
         async def body() -> None:
-            gw = Gateway(engine, host=host, port=port)
+            gw = Gateway(engine, host=host, port=port, faults=faults)
             await gw.start()
             box["gateway"] = gw
             box["loop"] = asyncio.get_running_loop()

@@ -75,10 +75,12 @@ guarantees happens only after any copy that still reads it).
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
+from collections import Counter, OrderedDict
 from typing import Dict, Iterable, List, NamedTuple, Optional, Set, Tuple
 
 import numpy as np
+
+from repro.serving.faults import FaultPlan, NO_FAULTS
 
 __all__ = ["PagedKVCache", "PrefixMatch", "NO_MATCH", "TRASH_PAGE",
            "pages_for"]
@@ -118,6 +120,10 @@ class PagedKVCache:
     max_batch: int
     max_pages_per_seq: int
     retain_prefixes: bool = True  # LRU-cache refcount-0 registered pages
+    # chaos hook: while `kv.exhaust` is armed the allocator reports an
+    # empty pool (level-triggered so capacity checks and allocations
+    # agree within a tick).  NO_FAULTS in production.
+    faults: FaultPlan = NO_FAULTS
 
     def __post_init__(self):
         if self.n_pages < 2:
@@ -192,6 +198,8 @@ class PagedKVCache:
         pages leave the retained pool without consuming an allocation,
         and the fork source is pinned against eviction for the fork
         copy."""
+        if self.faults.active("kv.exhaust"):
+            return 0
         avail = self.free_pages
         avail -= sum(1 for p in match.shared if p in self._retained)
         if match.fork_src is not None and match.fork_src in self._retained:
@@ -215,6 +223,8 @@ class PagedKVCache:
         page (its registry entries are dropped).  ``avoid`` pins pages
         that must survive this allocation (a pending fork source).
         Returns None when nothing is reclaimable."""
+        if self.faults.active("kv.exhaust"):
+            return None
         if self._free:
             return self._free.pop()
         for page in self._retained:
@@ -505,3 +515,99 @@ class PagedKVCache:
         """Mark EVERY registered page as materialized (single-dispatch
         prefill callers; per-slot callers use ``commit_pages``)."""
         self._pending.clear()
+
+    # -- invariants (chaos harness / crash containment) ----------------
+    def invalidate(self, slot: int) -> None:
+        """Poison-pill `slot`'s exclusively-owned pages before a crash-
+        containment release: a failed device tick may have written
+        garbage into them, so their prefix-registry claims are dropped —
+        they free instead of retaining, and no later prompt hash-matches
+        content that never materialized.  Pages shared with other slots
+        (refcount > 1) keep their entries: shared pages are never
+        written, so their contents predate the failed tick and stay
+        valid for the surviving owners."""
+        for page in self._owned[slot]:
+            if self.page_refs[page] > 1:
+                continue
+            for kind, key in self._page_keys.pop(page, ()):
+                (self._prefix if kind == "full" else self._tail).pop(key, None)
+            self._pending.discard(page)
+
+    def check(self) -> bool:
+        """Audit the allocator's standing invariants; AssertionError on
+        the first violation, True when the pool balances.  Cheap enough
+        to call after every tick in the chaos tests:
+
+          * free + retained + used == n_pages - 1, with the three sets
+            pairwise disjoint and the trash page in none of them;
+          * ``page_refs[p]`` equals the number of slots owning ``p``
+            (so free/retained pages have refcount 0);
+          * each slot's page-table row mirrors its owned list (trash
+            beyond it);
+          * every registry-claimed page is live (owned or retained) and
+            every prefix/tail entry's page carries the matching claim.
+        """
+        errors: List[str] = []
+        owned_all = [p for pages in self._owned for p in pages]
+        owned, free, retained = (set(owned_all), set(self._free),
+                                 set(self._retained))
+        if len(free) != len(self._free):
+            errors.append("duplicate pages on the free list")
+        for name, pages in (("owned", owned), ("free", free),
+                            ("retained", retained)):
+            if TRASH_PAGE in pages:
+                errors.append(f"trash page in {name} set")
+            bad = [p for p in pages if not 0 < p < self.n_pages]
+            if bad:
+                errors.append(f"{name} pages out of range: {bad}")
+        for a, b in (("owned", "free"), ("owned", "retained"),
+                     ("free", "retained")):
+            inter = {"owned": owned, "free": free,
+                     "retained": retained}[a] & {
+                         "owned": owned, "free": free, "retained": retained}[b]
+            if inter:
+                errors.append(f"{a}/{b} overlap: {sorted(inter)}")
+        total = len(owned) + len(free) + len(retained)
+        if total != self.n_pages - 1:
+            errors.append(
+                f"accounting: used {len(owned)} + free {len(free)} + "
+                f"retained {len(retained)} != pool {self.n_pages - 1}")
+        refs = Counter(owned_all)
+        for p in range(1, self.n_pages):
+            if self.page_refs[p] != refs.get(p, 0):
+                errors.append(
+                    f"page {p}: refcount {int(self.page_refs[p])} != "
+                    f"{refs.get(p, 0)} owning slots")
+        if self.page_refs[TRASH_PAGE] != 0:
+            errors.append("trash page has nonzero refcount")
+        for slot, pages in enumerate(self._owned):
+            row = self.table[slot]
+            if (list(row[:len(pages)]) != pages
+                    or any(row[len(pages):] != TRASH_PAGE)):
+                errors.append(
+                    f"slot {slot}: table row {row.tolist()} does not "
+                    f"mirror owned {pages}")
+        live = owned | retained
+        for page, keys in self._page_keys.items():
+            if page not in live:
+                errors.append(f"registry claims dead page {page}")
+            for kind, key in keys:
+                reg = self._prefix if kind == "full" else self._tail
+                val = reg.get(key)
+                got = val if kind == "full" else (val and val[0])
+                if got != page:
+                    errors.append(
+                        f"page {page}: stale {kind} claim {key!r} -> {val!r}")
+        for key, page in self._prefix.items():
+            if ("full", key) not in self._page_keys.get(page, ()):
+                errors.append(f"prefix entry {key!r} unclaimed by page {page}")
+        for key, (page, _) in self._tail.items():
+            if ("tail", key) not in self._page_keys.get(page, ()):
+                errors.append(f"tail entry {key!r} unclaimed by page {page}")
+        if self._pending - set(self._page_keys):
+            errors.append(
+                f"pending pages without registry claims: "
+                f"{sorted(self._pending - set(self._page_keys))}")
+        if errors:
+            raise AssertionError("PagedKVCache.check: " + "; ".join(errors))
+        return True

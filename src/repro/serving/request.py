@@ -16,8 +16,17 @@ frees pages immediately.
 Streamed outputs: every generated token produces a ``RequestOutput``
 record, delivered through ``engine.stream()`` (iterator) and/or the
 request's ``on_token`` callback.  The final record of a request carries
-``finished=True`` plus a ``finish_reason`` (``"length"`` | ``"stop"`` |
-``"cancelled"``).
+``finished=True`` plus a ``finish_reason``:
+
+    ``"length"``     max_new tokens generated
+    ``"stop"``       a stop token id was generated (kept in the output)
+    ``"cancelled"``  caller cancelled (or the client disconnected)
+    ``"timeout"``    deadline_ms / queue_timeout_ms expired host-side
+    ``"rejected"``   admission control refused the request
+    ``"error"``      a device-step failure consumed the request's tick
+                     (crash containment; the engine keeps serving)
+
+The last three carry the human-readable cause in ``error``.
 """
 
 from __future__ import annotations
@@ -49,6 +58,14 @@ class SamplingParams:
     temperature <= 0 is greedy; top_k == 0 and top_p >= 1.0 disable the
     respective truncations.  ``stop`` token ids end the request the step
     they are generated (the stop token is kept in the output).
+
+    Deadlines (both optional, milliseconds, enforced host-side in
+    ``Scheduler.plan_tick`` — no device work is interrupted):
+    ``deadline_ms`` bounds the request's total lifetime from submit;
+    ``queue_timeout_ms`` bounds only the wait for FIRST admission (a
+    preempted-and-requeued request has already been served, so only the
+    deadline applies to it).  Expiry finishes the request with
+    ``finish_reason="timeout"``.
     """
 
     temperature: float = 0.0
@@ -56,8 +73,14 @@ class SamplingParams:
     top_p: float = 1.0
     stop: Tuple[int, ...] = ()
     max_new: int = 32
+    deadline_ms: Optional[float] = None
+    queue_timeout_ms: Optional[float] = None
 
     def __post_init__(self):
+        for name in ("deadline_ms", "queue_timeout_ms"):
+            v = getattr(self, name)
+            if v is not None and v <= 0:
+                raise ValueError(f"{name} must be > 0, got {v}")
         if self.temperature < 0.0:
             raise ValueError(f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
@@ -86,6 +109,7 @@ class Request:
     state: RequestState = RequestState.QUEUED
     tokens: List[int] = dataclasses.field(default_factory=list)
     finish_reason: Optional[str] = None
+    error: Optional[str] = None  # cause for timeout/rejected/error finishes
     prefix_matched: int = 0  # tokens served from shared prefix pages at
     #                          the last admission (0 = no sharing)
 
@@ -106,3 +130,4 @@ class RequestOutput:
     finished: bool
     finish_reason: Optional[str]
     tokens: Tuple[int, ...]  # snapshot of all generated ids
+    error: Optional[str] = None  # cause for timeout/rejected/error finishes

@@ -42,7 +42,8 @@ tick scheduling entirely.
 
 from __future__ import annotations
 
-from typing import List, NamedTuple, Optional, Tuple
+import time
+from typing import Callable, List, NamedTuple, Optional, Tuple
 
 import numpy as np
 
@@ -52,7 +53,20 @@ from repro.serving.kv_cache import (NO_MATCH, TRASH_PAGE, PagedKVCache,
 from repro.serving.request import Request, RequestOutput, RequestState
 
 __all__ = ["Admission", "Emit", "PrefillChunk", "DecodeTick", "TickPlan",
-           "Scheduler"]
+           "Scheduler", "RejectionError", "QueueFullError"]
+
+
+class RejectionError(ValueError):
+    """Admission control refused a request at submit: it can NEVER run
+    (empty prompt, exceeds max_len, needs more pages than the pool has).
+    A ValueError subclass so seed-era callers catching ValueError keep
+    working."""
+
+
+class QueueFullError(RejectionError):
+    """Admission control refused a request because the bounded queue is
+    at capacity — a RETRYABLE condition (the gateway maps it to HTTP 429
+    + Retry-After, unlike never-fit rejections' 503)."""
 
 
 class Admission(NamedTuple):
@@ -139,7 +153,9 @@ class Scheduler:
     def __init__(self, kv: PagedKVCache, *, max_batch: int, max_len: int,
                  seed: int = 0, prefix_sharing: bool = True,
                  prefill_slice: Optional[int] = None,
-                 prefill_bucket: int = 16, spec_k: int = 0):
+                 prefill_bucket: int = 16, spec_k: int = 0,
+                 max_queue: Optional[int] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self.kv = kv
         self.max_batch, self.max_len = max_batch, max_len
         self.seed = seed
@@ -148,9 +164,13 @@ class Scheduler:
             raise ValueError(f"prefill_slice must be >= 1, got {prefill_slice}")
         if spec_k < 0:
             raise ValueError(f"spec_k must be >= 0, got {spec_k}")
+        if max_queue is not None and max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {max_queue}")
         self.prefill_slice = prefill_slice
         self.prefill_bucket = prefill_bucket
         self.spec_k = spec_k
+        self.max_queue = max_queue  # bounded admission (None = unbounded)
+        self._clock = clock  # injectable for deterministic deadline tests
 
         self.queue: List[Request] = []
         self.active: List[Optional[Request]] = [None] * max_batch
@@ -160,6 +180,8 @@ class Scheduler:
         #                       and the traffic-SLO benchmark report this)
         self.spec_proposed = 0  # draft tokens proposed (spec_k > 0)
         self.spec_accepted = 0  # draft tokens the target verified
+        self.timeouts = 0  # deadline/queue-timeout expiries (host-side)
+        self.rejections = 0  # admission-control refusals (submit + reject)
         self.prefill_tokens = 0  # prompt tokens materialized via chunks
         self.prefill_ticks = 0  # ticks that carried a prefill chunk
         #  (gateway /metrics + serve_slo: TTFT attribution — a TTFT
@@ -192,30 +214,68 @@ class Scheduler:
         # token is still in flight: not queued, not active, but LIVE —
         # cancel() must still reach them
         self._retiring: List[Request] = []
+        # terminal outputs produced DURING planning (timeouts, containment
+        # failures): the engine drains these into its poll() return so
+        # stream()/run() callers see them without an on_token callback
+        self._events: List[RequestOutput] = []
 
     # ------------------------------------------------------------------
     # submission / cancellation
     # ------------------------------------------------------------------
+    def never_fit(self, req: Request) -> Optional[str]:
+        """Admission-control policy: reason this request can NEVER be
+        served (no amount of waiting helps), or None if it could fit.
+        Public so the gateway can veto before the request ever crosses
+        onto the engine thread (-> HTTP 503)."""
+        if not req.prompt:
+            return "empty prompt"
+        need = len(req.prompt) + req.sampling.max_new
+        if need > self.max_len:
+            return f"prompt+max_new {need} > max_len {self.max_len}"
+        pages = pages_for(need, self.kv.page_size)
+        if pages > self.kv.max_pages_per_seq:
+            return (f"needs {pages} pages > max_pages_per_seq "
+                    f"{self.kv.max_pages_per_seq}")
+        if pages > self.kv.n_pages - 1:
+            return f"needs {pages} pages; pool has {self.kv.n_pages - 1}"
+        return None
+
+    def queue_full(self, extra: int = 0) -> bool:
+        """Bounded-admission check: would `extra` more submissions (e.g.
+        a gateway's not-yet-drained backlog) overflow ``max_queue``?"""
+        return (self.max_queue is not None
+                and len(self.queue) + extra >= self.max_queue)
+
     def submit(self, req: Request) -> int:
-        """Queue a request; returns its rid (auto-assigned when None)."""
+        """Queue a request; returns its rid (auto-assigned when None).
+
+        Raises :class:`RejectionError` for never-fit requests and
+        :class:`QueueFullError` when the bounded queue is at capacity
+        (both ValueError subclasses); the request is left untouched.
+        """
         if getattr(req, "_inflight", 0):
             raise ValueError(
                 f"request {req.rid} still has in-flight dispatched work")
         if req.rid is None:
             req.rid = self._next_rid
         self._next_rid = max(self._next_rid, req.rid + 1)
-        if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
-        need = len(req.prompt) + req.sampling.max_new
-        if need > self.max_len:
-            raise ValueError(
-                f"request {req.rid}: prompt+max_new {need} > max_len "
-                f"{self.max_len}")
+        reason = self.never_fit(req)
+        if reason is not None:
+            self.rejections += 1
+            raise RejectionError(f"request {req.rid}: {reason}")
+        if self.queue_full():
+            self.rejections += 1
+            raise QueueFullError(
+                f"request {req.rid}: queue full "
+                f"({len(self.queue)} >= max_queue {self.max_queue})")
         req.state = RequestState.QUEUED
         req.tokens = []
         req.finish_reason = None
+        req.error = None
         req._seq = self._arrival  # FIFO order, kept across preemption
         req._inflight = 0
+        req._t_submit = self._clock()  # deadline_ms / queue_timeout_ms base
+        req._admitted_once = False
         self._arrival += 1
         self.queue.append(req)
         return req.rid
@@ -240,17 +300,41 @@ class Scheduler:
                 return self._finish_now(r, "cancelled")
         return None
 
-    def _finish_now(self, req: Request, reason: str) -> RequestOutput:
+    def reject(self, rid: int, reason: str) -> Optional[RequestOutput]:
+        """Admission-control eviction seam: terminally reject a QUEUED
+        request with ``finish_reason="rejected"`` and the human-readable
+        `reason` in ``error``.  The public replacement for reaching into
+        the queue's private ordering: load-shedding policies (gateway
+        overload, operator action) name the rid and the scheduler does
+        the bookkeeping.  Returns None if rid is not queued (running
+        requests are past admission — use ``cancel``)."""
+        for qi, r in enumerate(self.queue):
+            if r.rid == rid:
+                self.queue.pop(qi)
+                self.rejections += 1
+                return self._finish_now(r, "rejected", error=reason)
+        return None
+
+    def _finish_now(self, req: Request, reason: str,
+                    error: Optional[str] = None) -> RequestOutput:
         req.state = (RequestState.CANCELLED if reason == "cancelled"
                      else RequestState.FINISHED)
         req.finish_reason = reason
+        req.error = error
         self.done.append(req)
         out = RequestOutput(
             rid=req.rid, token=None, index=len(req.tokens), state=req.state,
-            finished=True, finish_reason=reason, tokens=tuple(req.tokens))
+            finished=True, finish_reason=reason, tokens=tuple(req.tokens),
+            error=error)
         if req.on_token:
             req.on_token(out)
         return out
+
+    def take_events(self) -> List[RequestOutput]:
+        """Drain terminal outputs produced during planning (timeouts,
+        crash containment) for the engine's poll() return."""
+        events, self._events = self._events, []
+        return events
 
     # ------------------------------------------------------------------
     # admission policy
@@ -330,6 +414,7 @@ class Scheduler:
                 self.kv.register_prefix(slot, effective)
             req.state = RequestState.PREFILLING
             req.prefix_matched = match.matched
+            req._admitted_once = True  # queue_timeout_ms no longer applies
             req._admit_seq = self._admissions
             self._admissions += 1
             self.active[slot] = req  # slot is taken from this point on
@@ -345,13 +430,9 @@ class Scheduler:
             self._pending_forks.extend(forks)  # drained by plan_tick
             admitted.append(Admission(
                 slot, req, len(req.tokens), match.matched, tuple(forks)))
-        if (not admitted and self.queue and self._inflight_total == 0
-                and all(r is None for r in self.active)):
-            req = self.queue[self._next_queued_index()]
-            raise MemoryError(
-                f"request {req.rid} needs "
-                f"{pages_for(len(req.prompt) + req.sampling.max_new, self.kv.page_size)}"
-                f" pages; pool has {self.kv.n_pages - 1}")
+        # never-fit requests are rejected at submit() now, so a queue that
+        # cannot admit here is only ever WAITING (page pressure, deferred
+        # prefix, in-flight preempted sample) — no MemoryError escape hatch
         self.peak_pages = max(self.peak_pages, self.kv.used_pages)
         return admitted
 
@@ -469,12 +550,77 @@ class Scheduler:
                           live_mask, fresh, bool(hot), tuple(emit),
                           n_tok if self.spec_k else None)
 
+    def _expire(self) -> None:
+        """Enforce per-request deadlines host-side (start of every
+        plan_tick): queued requests past ``queue_timeout_ms`` (first
+        admission only) or ``deadline_ms``, and running requests past
+        ``deadline_ms``, finish NOW with ``finish_reason="timeout"``.
+        No device work is interrupted — an expired running slot releases
+        its pages and any still-in-flight sample for it is discarded at
+        ingest, exactly like cancellation."""
+        now = self._clock()
+        for r in list(self.queue):
+            sp = r.sampling
+            if sp.deadline_ms is None and sp.queue_timeout_ms is None:
+                continue
+            waited_ms = (now - r._t_submit) * 1e3
+            qto = None if r._admitted_once else sp.queue_timeout_ms
+            bounds = [b for b in (qto, sp.deadline_ms) if b is not None]
+            bound = min(bounds) if bounds else None
+            if bound is not None and waited_ms > bound:
+                self.queue.remove(r)
+                self.timeouts += 1
+                self._events.append(self._finish_now(
+                    r, "timeout",
+                    error=f"expired after {waited_ms:.0f}ms in queue "
+                          f"(bound {bound:g}ms)"))
+        for slot, r in enumerate(self.active):
+            if r is None or r.sampling.deadline_ms is None:
+                continue
+            age_ms = (now - r._t_submit) * 1e3
+            if age_ms > r.sampling.deadline_ms:
+                self.kv.release(slot)
+                self.active[slot] = None
+                self.timeouts += 1
+                self._events.append(self._finish_now(
+                    r, "timeout",
+                    error=f"deadline_ms {r.sampling.deadline_ms:g} "
+                          f"exceeded ({age_ms:.0f}ms)"))
+
+    def fail_active(self, error: str) -> List[RequestOutput]:
+        """Crash containment: a device tick died before its samples could
+        be read, so every ACTIVE and RETIRING request — whose in-flight
+        work and (for actives) cache writes are lost — finishes with
+        ``finish_reason="error"``.  Suspect exclusively-owned pages are
+        invalidated (registry claims dropped; they free rather than
+        retain) before release.  QUEUED requests survive untouched: a
+        preempted request's lost sample regenerates bit-identically on
+        resume (keyed sampling).  The ENGINE settles the in-flight
+        accounting by ``drop``-ing the failed tick's emits; this method
+        only retires state.  Pending COW forks and unread speculative
+        ticks die with the tick that would have consumed them."""
+        events: List[RequestOutput] = []
+        for slot, r in enumerate(self.active):
+            if r is None:
+                continue
+            self.kv.invalidate(slot)
+            self.kv.release(slot)
+            self.active[slot] = None
+            events.append(self._finish_now(r, "error", error=error))
+        for r in list(self._retiring):
+            self._retiring.remove(r)
+            events.append(self._finish_now(r, "error", error=error))
+        self._spec_unread.clear()
+        self._pending_forks = []
+        return events
+
     def plan_tick(self, *, admit: bool = True,
                   decode: bool = True) -> TickPlan:
         """Plan one engine tick: admissions + one prefill chunk per
         PREFILLING slot + one decode step per DECODING slot.  Host-pure;
         the engine dispatches the plan and (eventually) feeds the sampled
         tokens back through ``ingest``."""
+        self._expire()
         self._drain_dispatched()
         if admit:
             self.admit()

@@ -1,0 +1,529 @@
+"""Chaos harness: fault injection against the serving stack.
+
+Every leg drives a deterministic :class:`FaultPlan` (serving/faults.py)
+through the engine/gateway and asserts the robustness contract:
+
+  * every submitted request reaches a TERMINAL finish_reason (length /
+    stop / cancelled / timeout / rejected / error) — no silent drops;
+  * the page pool balances after every poll and at drain
+    (``PagedKVCache.check()``: free + retained + used == n_pages - 1,
+    refcounts exact, registry sound);
+  * requests NOT touched by a fault produce bit-identical token streams
+    to a fault-free run (keyed sampling: rng is (seed, rid, index), so
+    rescheduling never changes values);
+  * the engine keeps serving afterwards: a post-fault request matches a
+    fresh engine token-for-token.
+
+The dense legs run in the fast lane; the camformer / speculative /
+tensor-parallel legs are ``slow`` (the CI ``chaos`` lane runs them with
+XLA_FLAGS=--xla_force_host_platform_device_count=2)."""
+
+import http.client
+import json
+import threading
+import time
+
+import jax
+import pytest
+
+from repro.configs import smoke_config
+from repro.models import get_model_def
+from repro.models.module import init_params
+from repro.serving import (NO_FAULTS, FaultPlan, FaultSpec, QueueFullError,
+                           RejectionError, Request, SamplingParams,
+                           ServeEngine, parse_faults)
+from repro.serving.gateway import EngineRunner, serve_background
+
+_SLOW = pytest.mark.slow
+
+_SAMPLING = dict(temperature=0.8, top_k=8, max_new=6)
+
+_PROMPTS = [[3, 5, 8, 1], [4, 9, 2], [7, 7, 1, 3, 8], [11, 4, 6],
+            [1, 2, 3, 4, 5], [9, 8, 7]]
+
+
+def _cfg(backend="dense", **kw):
+    return smoke_config("codeqwen1.5-7b").replace(attn_backend=backend, **kw)
+
+
+def _engine(cfg, **kw):
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    kw.setdefault("max_batch", 2)
+    kw.setdefault("max_len", 64)
+    kw.setdefault("page_size", 8)
+    return ServeEngine(md, cfg, params, **kw)
+
+
+def _requests(n=6, **sampling_kw):
+    kw = dict(_SAMPLING, **sampling_kw)
+    return [Request(prompt=list(_PROMPTS[i % len(_PROMPTS)]),
+                    sampling=SamplingParams(**kw), rid=i)
+            for i in range(n)]
+
+
+def _drive(eng, max_polls=2000):
+    """Drain the engine, auditing the allocator after EVERY poll; a
+    stalled engine (fault window never closing, lost wakeup) fails loudly
+    instead of hanging the suite."""
+    events = []
+    polls = 0
+    while eng.has_work or eng.has_pending:
+        events.extend(eng.poll())
+        eng.kv.check()
+        polls += 1
+        assert polls < max_polls, "engine stalled under fault injection"
+    eng.kv.check()
+    return events
+
+
+def _baseline(cfg, reqs, **engine_kw):
+    """Fault-free token streams for `reqs` (fresh engine, same rids —
+    keyed sampling makes this the bit-exact reference)."""
+    eng = _engine(cfg, **engine_kw)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    return {r.rid: tuple(r.tokens) for r in reqs}
+
+
+def _terminal_map(reqs):
+    return {r.rid: r.finish_reason for r in reqs}
+
+
+# ---------------------------------------------------------------------------
+# step.error: crash containment
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["sync", "overlap"])
+def test_step_error_contained_and_survivors_bit_identical(mode):
+    """A fused-step exception at tick 2 fails ONLY that tick's in-flight
+    requests (finish_reason='error', pages freed); queued requests run
+    afterwards bit-identically to a fault-free engine, and the engine
+    itself keeps serving (a post-fault submit matches a fresh engine)."""
+    cfg = _cfg()
+    want = _baseline(cfg, _requests(), mode=mode)
+
+    faults = FaultPlan([FaultSpec("step.error", start=2, stop=3)])
+    reqs = _requests()
+    eng = _engine(cfg, mode=mode, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+
+    reasons = _terminal_map(reqs)
+    assert all(reasons[i] is not None for i in range(6)), reasons
+    # max_batch=2, max_new=6: rids 0/1 are the residents at tick 2
+    assert reasons[0] == reasons[1] == "error"
+    assert all(reqs[i].error for i in (0, 1))  # the cause is recorded
+    assert eng.tick_errors == 1 and "InjectedFault" in eng.last_error
+    for i in range(2, 6):  # untouched requests: bit-identical streams
+        assert reasons[i] == "length"
+        assert tuple(reqs[i].tokens) == want[i], i
+    assert eng.sched._inflight_total == 0  # lost samples were settled
+
+    # the engine is still a working engine: fresh traffic is unaffected
+    post = Request(prompt=[2, 4, 6, 8], sampling=SamplingParams(**_SAMPLING),
+                   rid=100)
+    eng.submit(post)
+    _drive(eng)
+    ref = Request(prompt=[2, 4, 6, 8], sampling=SamplingParams(**_SAMPLING),
+                  rid=100)
+    ctrl = _engine(cfg, mode=mode)
+    ctrl.submit(ref)
+    _drive(ctrl)
+    assert post.finish_reason == "length"
+    assert tuple(post.tokens) == tuple(ref.tokens)
+
+
+def test_repeated_step_errors_never_wedge():
+    """Several distinct fault ticks in one run: every request still
+    terminates, the pool still balances, and tick_errors counts each."""
+    cfg = _cfg()
+    faults = parse_faults("step.error@2,step.error@5,step.error@9")
+    reqs = _requests(8)
+    eng = _engine(cfg, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    assert all(r.finish_reason is not None for r in reqs)
+    assert eng.tick_errors >= 1
+    assert eng.sched._inflight_total == 0
+
+
+# ---------------------------------------------------------------------------
+# kv.exhaust: page-pool exhaustion window
+# ---------------------------------------------------------------------------
+
+
+def test_kv_exhaust_window_stalls_admission_then_completes():
+    """While the allocator reports a dry pool, admission stalls (nothing
+    crashes); once the window closes every request completes with
+    token streams bit-identical to the fault-free run."""
+    cfg = _cfg()
+    want = _baseline(cfg, _requests())
+
+    faults = FaultPlan([FaultSpec("kv.exhaust", start=1, stop=4)])
+    reqs = _requests()
+    eng = _engine(cfg, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    assert {r.rid: tuple(r.tokens) for r in reqs} == want
+    assert all(r.finish_reason == "length" for r in reqs)
+    assert eng.tick_errors == 0  # exhaustion is backpressure, not a crash
+
+
+# ---------------------------------------------------------------------------
+# tick.delay: straggler ticks change nothing but wall clock
+# ---------------------------------------------------------------------------
+
+
+def test_tick_delay_streams_identical():
+    cfg = _cfg()
+    want = _baseline(cfg, _requests(4))
+    faults = FaultPlan(
+        [FaultSpec("tick.delay", prob=0.5, delay_s=0.002)], seed=3)
+    reqs = _requests(4)
+    eng = _engine(cfg, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    assert faults.fired["tick.delay"] > 0  # the storm actually happened
+    assert {r.rid: tuple(r.tokens) for r in reqs} == want
+
+
+# ---------------------------------------------------------------------------
+# deadlines / queue timeouts (injected clock: no wall-clock sleeping)
+# ---------------------------------------------------------------------------
+
+
+def test_deadline_expires_running_request():
+    cfg = _cfg()
+    t = {"now": 0.0}
+    eng = _engine(cfg)
+    eng.sched._clock = lambda: t["now"]
+    doomed = Request(prompt=[3, 5, 8, 1],
+                     sampling=SamplingParams(max_new=6, deadline_ms=50.0),
+                     rid=0)
+    steady = Request(prompt=[4, 9, 2], sampling=SamplingParams(max_new=6),
+                     rid=1)
+    eng.submit(doomed)
+    eng.submit(steady)
+    eng.poll()
+    eng.poll()  # both admitted and decoding, clock frozen at t=0
+    t["now"] = 1.0  # 1000ms later: doomed is 950ms past its deadline
+    events = _drive(eng)
+    assert doomed.finish_reason == "timeout"
+    assert "deadline_ms" in doomed.error
+    assert steady.finish_reason == "length" and len(steady.tokens) == 6
+    assert eng.sched.timeouts == 1
+    assert eng.sched._inflight_total == 0  # in-flight sample settled
+    terminal = [e for e in events if e.finished and e.rid == 0]
+    assert len(terminal) == 1 and terminal[0].finish_reason == "timeout"
+
+
+def test_queue_timeout_applies_only_before_first_admission():
+    cfg = _cfg()
+    t = {"now": 0.0}
+    eng = _engine(cfg, max_batch=1)
+    eng.sched._clock = lambda: t["now"]
+    first = Request(prompt=[3, 5, 8, 1],
+                    sampling=SamplingParams(max_new=6,
+                                            queue_timeout_ms=50.0),
+                    rid=0)
+    waiter = Request(prompt=[4, 9, 2],
+                     sampling=SamplingParams(max_new=6,
+                                             queue_timeout_ms=50.0),
+                     rid=1)
+    eng.submit(first)
+    eng.submit(waiter)
+    eng.poll()  # first admits (max_batch=1); waiter stays queued
+    t["now"] = 0.2  # 200ms: waiter's queue wait exceeds its 50ms bound,
+    #                 first is ADMITTED so its queue timeout no longer
+    #                 applies — only a deadline_ms could expire it now
+    _drive(eng)
+    assert waiter.finish_reason == "timeout" and "queue" in waiter.error
+    assert first.finish_reason == "length" and len(first.tokens) == 6
+    assert eng.sched.timeouts == 1
+
+
+# ---------------------------------------------------------------------------
+# admission control: bounded queue, reject(), never-fit
+# ---------------------------------------------------------------------------
+
+
+def test_bounded_queue_and_public_reject():
+    cfg = _cfg()
+    eng = _engine(cfg, max_batch=1, max_queue=2)
+    a, b, c = _requests(3, temperature=0.0)
+    eng.submit(a)
+    eng.submit(b)
+    with pytest.raises(QueueFullError, match="queue full"):
+        eng.submit(c)
+    assert c.finish_reason is None and c not in eng.queue  # untouched
+    assert eng.sched.rejections == 1
+
+    # public load-shedding seam: reject a QUEUED request by rid
+    out = eng.sched.reject(b.rid, "load shed by operator")
+    assert out is not None and out.finish_reason == "rejected"
+    assert b.finish_reason == "rejected"
+    assert b.error == "load shed by operator"
+    assert eng.sched.reject(999, "no such rid") is None
+    assert eng.sched.rejections == 2
+
+    _drive(eng)
+    assert a.finish_reason == "length"
+
+
+def test_never_fit_rejected_at_submit_with_reason():
+    cfg = _cfg()
+    eng = _engine(cfg, max_len=16)
+    req = Request(prompt=[1] * 12, sampling=SamplingParams(max_new=8), rid=0)
+    with pytest.raises(RejectionError, match="max_len 16"):
+        eng.submit(req)
+    assert not eng.queue
+    assert eng.sched.never_fit(req) is not None
+    ok = Request(prompt=[1, 2], sampling=SamplingParams(max_new=4), rid=1)
+    assert eng.sched.never_fit(ok) is None
+
+
+# ---------------------------------------------------------------------------
+# fault-plan semantics (pure host, no model)
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_windows_probability_and_parse():
+    plan = parse_faults("step.error@3,kv.exhaust@1:4,tick.delay@0::p0.5:d0.05",
+                        seed=7)
+    by_point = {s.point: s for s in plan.specs}
+    assert by_point["step.error"].start == 3
+    assert by_point["step.error"].stop == 4  # @3 arms tick 3 only
+    assert (by_point["kv.exhaust"].start, by_point["kv.exhaust"].stop) == (1, 4)
+    td = by_point["tick.delay"]
+    assert td.stop is None and td.prob == 0.5 and td.delay_s == 0.05
+
+    plan.advance()  # tick 0
+    assert not plan.active("kv.exhaust") and not plan.fires("step.error")
+    plan.advance()  # tick 1
+    assert plan.active("kv.exhaust")
+    plan.advance(), plan.advance()  # tick 3
+    assert plan.fires("step.error")
+    plan.advance()  # tick 4: @3 armed tick 3 ONLY
+    assert not plan.fires("step.error")
+    # probabilistic draws are a pure function of (seed, point, call):
+    # replaying the same plan produces the same firing sequence
+    draws = [plan.delay("tick.delay") > 0 for _ in range(32)]
+    replay = parse_faults("tick.delay@0::p0.5:d0.05", seed=7)
+    for _ in range(4):
+        replay.advance()
+    assert [replay.delay("tick.delay") > 0 for _ in range(32)] == draws
+    assert 0 < sum(draws) < 32  # p=0.5 actually splits
+
+    assert not NO_FAULTS and not NO_FAULTS.active("kv.exhaust")
+    assert parse_faults(None) is NO_FAULTS
+    with pytest.raises(ValueError):
+        SamplingParams(deadline_ms=-1.0)
+    with pytest.raises(ValueError):
+        SamplingParams(queue_timeout_ms=0.0)
+
+
+# ---------------------------------------------------------------------------
+# gateway: disconnect storms, 429/503 backpressure, stop() honesty
+# ---------------------------------------------------------------------------
+
+
+def _sse_post(port, spec, timeout=300):
+    conn = http.client.HTTPConnection("127.0.0.1", port, timeout=timeout)
+    conn.request("POST", "/v1/generate", body=json.dumps(spec),
+                 headers={"Content-Type": "application/json"})
+    resp = conn.getresponse()
+    events, status = [], resp.status
+    headers = dict(resp.getheaders())
+    if status == 200:
+        while True:
+            line = resp.readline()
+            if not line:
+                break  # server dropped the connection (disconnect storm)
+            line = line.strip()
+            if not line.startswith(b"data: "):
+                continue
+            evt = json.loads(line[6:])
+            events.append(evt)
+            if evt.get("finished"):
+                break
+    else:
+        events.append(json.loads(resp.read()))
+    conn.close()
+    return status, events, headers
+
+
+def _wait_for(cond, timeout=60.0, interval=0.05):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(interval)
+    return cond()
+
+
+def test_gateway_disconnect_storm_contained():
+    """The gateway drops 4 client connections mid-stream (times-capped
+    ``gateway.disconnect``); the dropped requests cancel server-side and
+    free their pages, the survivors finish, and the engine serves fresh
+    traffic afterwards with a balanced pool."""
+    faults = FaultPlan(
+        [FaultSpec("gateway.disconnect", prob=1.0, times=4)])
+    eng = _engine(_cfg(), max_batch=3, faults=faults)
+    handle = serve_background(eng)
+    try:
+        results = [None] * 6
+        spec = {"prompt": [3, 5, 8, 1], "max_new": 6, "temperature": 0.8,
+                "top_k": 8}
+
+        def client(i):
+            try:
+                results[i] = _sse_post(handle.port, dict(spec))
+            except OSError:  # reset mid-read: same thing as a drop
+                results[i] = (200, [], {})
+
+        threads = [threading.Thread(target=client, args=(i,))
+                   for i in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(120)
+        dropped = sum(1 for st, evts, _ in results
+                      if st == 200 and not (evts and evts[-1].get("finished")))
+        finished = sum(1 for st, evts, _ in results
+                       if st == 200 and evts and evts[-1].get("finished"))
+        assert dropped == 4 and finished == 2, results
+        assert _wait_for(lambda: not (eng.has_work or eng.has_pending))
+        eng.kv.check()
+        snap = handle.runner.metrics.snapshot()
+        assert snap["requests"]["cancelled"] == 4
+        assert snap["requests"]["completed"] == 2
+
+        # the storm is spent (times=4): fresh traffic completes normally
+        st, evts, _ = _sse_post(handle.port, dict(spec))
+        assert st == 200 and evts[-1]["finished"]
+        assert evts[-1]["finish_reason"] == "length"
+        assert _wait_for(lambda: not (eng.has_work or eng.has_pending))
+        eng.kv.check()
+    finally:
+        handle.stop()
+
+
+def test_gateway_backpressure_429_and_503():
+    """Admission vetoes map to honest HTTP: a full bounded queue is 429
+    + Retry-After (retryable), a request the engine can NEVER serve is
+    503; neither ever reaches the engine thread."""
+    eng = _engine(_cfg(), n_pages=3, max_queue=0)  # 2 usable pages
+    handle = serve_background(eng)
+    try:
+        # never-fit beats queue-full: 503, not 429
+        st, evts, _ = _sse_post(
+            handle.port, {"prompt": [1, 2, 3], "max_new": 30})
+        assert st == 503
+        assert evts[0]["finish_reason"] == "rejected"
+        assert "pool has 2" in evts[0]["error"]
+        # fits the pool but the queue is full (max_queue=0): 429
+        st, evts, headers = _sse_post(
+            handle.port, {"prompt": [1, 2, 3], "max_new": 1})
+        assert st == 429
+        assert headers.get("Retry-After") == "1"
+        assert evts[0]["retry_after_s"] == 1
+        assert "queue full" in evts[0]["error"]
+        snap = handle.runner.metrics.snapshot()
+        assert snap["requests"]["rejected"] == 2
+        assert snap["requests"]["submitted"] == 0  # vetoed pre-submit
+    finally:
+        handle.stop()
+
+
+def test_runner_stop_timeout_reports_failure(caplog):
+    """A stop() whose join times out must say so (return False + log),
+    not report a clean shutdown while the thread still runs."""
+
+    class Stuck(EngineRunner):
+        def run(self):  # ignores _stopping long enough to miss the join
+            time.sleep(0.5)
+
+    eng = _engine(_cfg())
+    runner = Stuck(eng)
+    runner.start()
+    with caplog.at_level("ERROR", logger="repro.serving.gateway"):
+        assert runner.stop(timeout=0.05) is False
+    assert any("failed to stop" in r.message for r in caplog.records)
+    runner.join(5)  # let the stuck thread drain before the test exits
+    assert runner.stop(timeout=5) is True  # once dead, stop reports clean
+
+
+# ---------------------------------------------------------------------------
+# slow legs: camformer, speculative rollback, tensor-parallel containment
+# ---------------------------------------------------------------------------
+
+
+@_SLOW
+@pytest.mark.parametrize("backend", ["camformer"])
+def test_chaos_matrix_camformer(backend):
+    cfg = _cfg(backend)
+    want = _baseline(cfg, _requests())
+    faults = parse_faults("step.error@3,kv.exhaust@5:7")
+    reqs = _requests()
+    eng = _engine(cfg, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    reasons = _terminal_map(reqs)
+    assert all(v is not None for v in reasons.values())
+    assert eng.tick_errors == 1
+    for r in reqs:
+        if r.finish_reason == "length":
+            assert tuple(r.tokens) == want[r.rid], r.rid
+
+
+@_SLOW
+def test_spec_exhaustion_rollback_preempts_and_streams_identical():
+    """kv.exhaust during speculative decoding: a rejected-suffix rollback
+    whose boundary fork cannot allocate preempts the slot instead of
+    handing it a shared page; resume is token-exact, so the full run
+    still matches the fault-free speculative engine bit-for-bit."""
+    cfg = _cfg("dense")
+    kw = dict(spec_k=2, max_batch=2, n_pages=9)
+    want = _baseline(cfg, _requests(4, temperature=0.0), **kw)
+    faults = FaultPlan([FaultSpec("kv.exhaust", start=2, stop=5)])
+    reqs = _requests(4, temperature=0.0)
+    eng = _engine(cfg, faults=faults, **kw)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    assert {r.rid: tuple(r.tokens) for r in reqs} == want
+    assert all(r.finish_reason == "length" for r in reqs)
+
+
+@_SLOW
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (XLA_FLAGS="
+                           "--xla_force_host_platform_device_count=2)")
+def test_tp2_step_error_contained():
+    """Crash containment under tensor parallelism: the mesh-wide fused
+    step dies, the tick's requests fail, the replicated token buffer
+    resets, and the sharded engine keeps serving bit-identically."""
+    cfg = _cfg()
+    # tp=1 reference is valid: test_sharded pins tp-degree token identity
+    want = _baseline(cfg, _requests(4))
+    faults = FaultPlan([FaultSpec("step.error", start=2, stop=3)])
+    reqs = _requests(4)
+    eng = _engine(cfg, tp=2, faults=faults)
+    for r in reqs:
+        eng.submit(r)
+    _drive(eng)
+    reasons = _terminal_map(reqs)
+    assert all(v is not None for v in reasons.values())
+    assert reasons[0] == reasons[1] == "error"
+    assert eng.tick_errors == 1
+    for i in (2, 3):
+        assert reasons[i] == "length"
+        assert tuple(reqs[i].tokens) == want[i]

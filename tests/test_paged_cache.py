@@ -19,6 +19,7 @@ from repro.models import get_model_def
 from repro.models.module import init_params
 from repro.serving.engine import Request, SamplingParams, ServeEngine
 from repro.serving.kv_cache import TRASH_PAGE, PagedKVCache, pages_for
+from repro.serving.scheduler import RejectionError
 
 _IS_LEAF = lambda x: (isinstance(x, tuple) and len(x) == 2
                       and isinstance(x[0], jax.ShapeDtypeStruct))
@@ -446,14 +447,102 @@ def test_paged_engine_single_token_request():
 
 
 def test_paged_engine_oversized_request_raises():
+    """A request that can NEVER fit the page pool is rejected at submit
+    (admission control: RejectionError, a ValueError subclass) instead of
+    poisoning the queue until a mid-serve MemoryError."""
     cfg = _cam_cfg()
     md = get_model_def(cfg)
     params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
     eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8,
                       n_pages=3)  # 2 usable pages = 16 tokens
-    eng.submit(Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=30), rid=0))
-    with pytest.raises(MemoryError):
-        eng.run()
+    req = Request(prompt=[1, 2, 3], sampling=SamplingParams(max_new=30), rid=0)
+    with pytest.raises(RejectionError, match="pool has 2"):
+        eng.submit(req)
+    assert not eng.queue  # never enqueued; the engine keeps serving
+
+
+# ---------------------------------------------------------------------------
+# page-leak regressions (ISSUE 10): every path ends with kv.check()
+# balancing free + retained + used == n_pages - 1
+
+
+def test_cancel_mid_prefill_releases_pages():
+    """Cancelling a request WHILE its chunked prefill is in flight (some
+    chunks materialized, more planned) must release every reserved page
+    and leave the registry sound — the classic mid-admission leak."""
+    cfg = _cam_cfg()
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=64, page_size=8,
+                      prefill_slice=8)
+    req = Request(prompt=list(range(1, 25)),  # 24 tokens: 3+ chunk ticks
+                  sampling=SamplingParams(max_new=4), rid=0)
+    eng.submit(req)
+    eng.poll()  # admission + FIRST chunk only
+    assert req.state.name == "PREFILLING"
+    assert eng.kv.used_pages > 0
+    out = eng.cancel(0)
+    assert out is not None and out.finish_reason == "cancelled"
+    eng.run()  # drain any in-flight tick
+    eng.kv.check()
+    assert eng.kv.used_pages == 0
+    assert not eng.has_work and not eng.has_pending
+
+
+def test_preempt_then_cancel_balances_pool():
+    """A preempted (re-queued, tokens kept) request that is then
+    cancelled must not resurrect or leak its released pages; the winner
+    decodes to completion and the pool balances."""
+    cfg = _cfg_for("dense")
+    md = get_model_def(cfg)
+    params = init_params(md.specs(cfg), jax.random.PRNGKey(0))
+    # 4 usable pages; low needs 2, high needs 3 -> admission preempts low
+    eng = ServeEngine(md, cfg, params, max_batch=2, max_len=32, page_size=8,
+                      n_pages=5)
+    low = Request(prompt=[3, 5, 8, 1], sampling=SamplingParams(max_new=8),
+                  rid=0, priority=0)
+    eng.submit(low)
+    eng.poll()
+    eng.poll()  # low is DECODING (evictable) with tokens accumulated
+    high = Request(prompt=list(range(2, 12)),
+                   sampling=SamplingParams(max_new=8), rid=1, priority=1)
+    eng.submit(high)
+    while eng.preemptions == 0 and (eng.has_work or eng.has_pending):
+        eng.poll()
+        eng.kv.check()
+    assert eng.preemptions >= 1 and low in eng.queue
+    out = eng.cancel(0)  # cancel the preempted request while queued
+    assert out is not None and out.finish_reason == "cancelled"
+    eng.run()
+    eng.kv.check()
+    assert eng.kv.used_pages == 0
+    assert high.finish_reason == "length" and len(high.tokens) == 8
+    assert low.finish_reason == "cancelled"
+
+
+def test_cow_fork_then_truncate_balances():
+    """COW-fork a shared prefix, truncate the sharer INTO the shared
+    page (boundary fork), then release everything: refcounts, registry
+    claims, and the free/retained split must balance at every step."""
+    kv = PagedKVCache(n_pages=8, page_size=8, max_batch=2,
+                      max_pages_per_seq=4)
+    prompt = list(range(16))  # 2 full pages
+    kv.reserve(0, 16)
+    kv.register_prefix(0, prompt)
+    kv.commit_prefixes()
+    kv.check()
+    m = kv.match_prefix(prompt + [7, 7, 7])
+    kv.reserve_shared(1, m, 24)  # 2 aliased pages + 1 private
+    kv.check()
+    forks = kv.truncate_to(1, 12)  # cut INTO the second shared page
+    assert len(forks) == 1
+    kv.check()
+    kv.release(1)
+    kv.check()
+    kv.release(0)  # registered pages retire to the RETAINED pool
+    kv.check()
+    assert kv.used_pages == 0
+    assert kv.free_pages == kv.n_pages - 1  # retained pages reclaimable
 
 
 # ---------------------------------------------------------------------------

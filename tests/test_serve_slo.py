@@ -19,7 +19,8 @@ def _args(**kw):
         arch="codeqwen1.5-7b", backend="dense", requests=3, rate=50.0,
         shared_frac=0.5, shared_len=8, max_new=2, max_batch=3, max_len=48,
         page_size=8, n_pages=None, mode="overlap", temperature=0.7, seed=0,
-        slo_ttft_ms=60000.0, slo_tpot_ms=60000.0, tp=1, spec_k=None)
+        slo_ttft_ms=60000.0, slo_tpot_ms=60000.0, tp=1, spec_k=None,
+        max_queue=None, deadline_ms=None)
     defaults.update(kw)
     import argparse
 
